@@ -1,0 +1,104 @@
+"""Paper Fig. 3: runtime breakdown of the decoder pipeline stages.
+
+Stages timed separately (same decomposition as the paper):
+  huffman     : sync (intra+inter equivalent) + output write pass
+  dc_dec      : DC difference prefix sums
+  idct_zigzag : fused dequant + de-zigzag + IDCT
+  assemble    : plane assembly + upsample + color conversion
+Plus the paper's sub-breakdown of huffman into sync vs write.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, load_dataset, time_call
+
+from repro.core import ParallelDecoder, DecodeState
+from repro.core import decode as D
+from repro.core.sync import chain_entries, jacobi_sync
+
+
+def run_rows():
+    rows = []
+    for name in ("newyork", "tos_14"):
+        ds = load_dataset(name)
+        dec = ParallelDecoder.from_bytes(ds.jpeg_bytes,
+                                         chunk_bits=ds.spec.subsequence_bits)
+        plan, dev = dec.plan, dec.dev
+
+        sync_fn = jax.jit(lambda d: jacobi_sync(
+            d, s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            max_rounds=plan.n_chunks + 2))
+
+        def t_sync():
+            jax.block_until_ready(sync_fn(dev).exits.p)
+
+        res = sync_fn(dev)
+
+        @jax.jit
+        def write_fn(d, exits):
+            bases = D.chunk_write_bases(d, exits.n)
+            seg_end = jnp.concatenate([
+                d["seg_coeff_base"][1:],
+                jnp.asarray([plan.total_units * 64], jnp.int32)])
+            write_max = seg_end[d["chunk_seg"]] - 1
+            meta = D.chunk_meta(d)
+            out = jnp.zeros((plan.total_units * 64,), jnp.int32)
+            _, out = D.decode_span(
+                d, chain_entries(d, exits), meta["word_base"], meta["limit"],
+                meta["ts"], meta["upm"], s_max=plan.s_max,
+                min_code_bits=plan.min_code_bits, write=True, out=out,
+                write_base=bases, write_max=write_max)
+            return out.reshape(plan.total_units, 64)
+
+        def t_write():
+            jax.block_until_ready(write_fn(dev, res.exits))
+
+        coeffs = write_fn(dev, res.exits)
+        dc_fn = jax.jit(lambda d, c: D.undiff_dc(d, c))
+
+        def t_dc():
+            jax.block_until_ready(dc_fn(dev, coeffs))
+
+        coeffs_abs = dc_fn(dev, coeffs)
+        idct_fn = jax.jit(lambda d, c: D.idct_units_folded(
+            c, d["m_matrices"], d["unit_mrow"]))
+
+        def t_idct():
+            jax.block_until_ready(idct_fn(dev, coeffs_abs))
+
+        def t_full():
+            out = dec.decode(emit="rgb")
+            out.rgb.block_until_ready()
+
+        ts = {
+            "huffman_sync": time_call(t_sync),
+            "huffman_write": time_call(t_write),
+            "dc_dec": time_call(t_dc),
+            "idct_zigzag": time_call(t_idct),
+            "full": time_call(t_full),
+        }
+        huff = ts["huffman_sync"] + ts["huffman_write"]
+        total = max(ts["full"], 1e-9)
+        for k, v in ts.items():
+            rows.append({
+                "name": f"breakdown/{name}/{k}",
+                "us_per_call": v * 1e6,
+                "derived": f"share={v/total*100:.1f}%",
+            })
+        rows.append({
+            "name": f"breakdown/{name}/huffman_total",
+            "us_per_call": huff * 1e6,
+            "derived": (f"share={huff/total*100:.1f}%"
+                        f";sync_share_of_huff={ts['huffman_sync']/huff*100:.0f}%"),
+        })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

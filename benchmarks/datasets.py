@@ -1,0 +1,48 @@
+"""Paper Fig. 4/5 + Fig. 8: decode speed across the four resolution corpora.
+
+Baselines (in-repo stand-ins, DESIGN.md §9):
+  sequential : per-image-only parallelism (nvJPEG-hybrid role)
+  faithful   : the paper's two-level sync schedule
+  jacobi     : ours (jgu role)
+Derived column: speedup of jacobi over each baseline + MB/s throughput.
+"""
+from __future__ import annotations
+
+from .common import decode_time, emit, load_dataset
+
+DATASETS = ["newyork", "stata", "tos_1440p", "tos_4k"]
+
+
+def run_rows():
+    rows = []
+    for name in DATASETS:
+        ds = load_dataset(name)
+        times = {}
+        for sync in ("sequential", "faithful", "jacobi"):
+            t, dec = decode_time(ds, sync)
+            times[sync] = t
+            rows.append({
+                "name": f"datasets/{name}/{sync}",
+                "us_per_call": t * 1e6,
+                "derived": (
+                    f"MBps={ds.compressed_mb / t:.1f};imgs={len(ds.jpeg_bytes)}"
+                    f";res={ds.spec.width}x{ds.spec.height}"
+                ),
+            })
+        rows.append({
+            "name": f"datasets/{name}/speedup",
+            "us_per_call": times["jacobi"] * 1e6,
+            "derived": (
+                f"vs_sequential={times['sequential']/times['jacobi']:.2f}x"
+                f";vs_faithful={times['faithful']/times['jacobi']:.2f}x"
+            ),
+        })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

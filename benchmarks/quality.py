@@ -1,0 +1,41 @@
+"""Paper Fig. 6/7 + Fig. 9: decode speed vs image quality (tos ladder).
+
+Lower quality => shorter bitstreams => fewer/shorter Huffman codes =>
+earlier self-synchronization but less work per image; the paper observes
+throughput (per *compressed* byte) decreasing with quality loss.
+"""
+from __future__ import annotations
+
+from .common import decode_time, emit, load_dataset
+
+DATASETS = ["tos_4k", "tos_8", "tos_14", "tos_20"]
+
+
+def run_rows():
+    rows = []
+    for name in DATASETS:
+        ds = load_dataset(name)
+        times = {}
+        for sync in ("sequential", "jacobi"):
+            t, dec = decode_time(ds, sync)
+            times[sync] = t
+        out = dec.coefficients()
+        rows.append({
+            "name": f"quality/{name}/jacobi",
+            "us_per_call": times["jacobi"] * 1e6,
+            "derived": (
+                f"MBps={ds.compressed_mb / times['jacobi']:.1f}"
+                f";q={ds.spec.quality}"
+                f";speedup_vs_seq={times['sequential']/times['jacobi']:.2f}x"
+                f";sync_rounds={out.sync_rounds}"
+            ),
+        })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run              # all
+  PYTHONPATH=src python -m benchmarks.run breakdown    # one table
+  BENCH_SCALE=0.05 PYTHONPATH=src python -m benchmarks.run datasets
+"""
+import sys
+
+
+def main() -> None:
+    from . import breakdown, datasets, quality, subseq_size
+    from .common import emit
+
+    suites = {
+        "datasets": datasets,     # Fig. 4/5 + Fig. 8
+        "quality": quality,       # Fig. 6/7 + Fig. 9
+        "breakdown": breakdown,   # Fig. 3
+        "subseq_size": subseq_size,  # Table II/III subsequence column
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        emit(suites[name].run_rows())
+
+
+if __name__ == "__main__":
+    main()

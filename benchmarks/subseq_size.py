@@ -1,0 +1,35 @@
+"""Paper Table II/III column: subsequence-size sensitivity.
+
+The paper picks 1024-bit subsequences for high-quality corpora and 128 for
+tos_8; this sweep reproduces the trade-off (smaller chunks = more
+parallelism but more sync rounds / overflow work).
+"""
+from __future__ import annotations
+
+from .common import decode_time, emit, load_dataset
+
+
+def run_rows():
+    rows = []
+    for name, sizes in (("newyork", (128, 256, 1024, 4096)),
+                        ("tos_8", (128, 256, 1024))):
+        ds = load_dataset(name)
+        for cb in sizes:
+            t, dec = decode_time(ds, "jacobi", chunk_bits=cb, rounds=2)
+            out = dec.coefficients()
+            rows.append({
+                "name": f"subseq/{name}/{cb}b",
+                "us_per_call": t * 1e6,
+                "derived": (f"MBps={ds.compressed_mb / t:.1f}"
+                            f";chunks={dec.plan.n_chunks}"
+                            f";rounds={out.sync_rounds}"),
+            })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

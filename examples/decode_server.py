@@ -1,0 +1,56 @@
+"""Batched JPEG decode "server": the paper's decoder serving continuous
+request batches, with the three baselines the paper compares against.
+
+    PYTHONPATH=src python examples/decode_server.py --images 32 --rounds 3
+
+Modes (DESIGN.md §9):
+  jacobi     : ours (bulk-synchronous self-sync, beyond-paper schedule)
+  faithful   : the paper's two-level overflow pattern (Algorithm 3)
+  sequential : per-image parallelism only (nvJPEG-hybrid stand-in)
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import ParallelDecoder
+from repro.jpeg.encoder import DatasetSpec, build_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--images", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--width", type=int, default=320)
+    ap.add_argument("--height", type=int, default=192)
+    ap.add_argument("--quality", type=int, default=85)
+    ap.add_argument("--chunk-bits", type=int, default=1024)
+    args = ap.parse_args()
+
+    ds = build_dataset(DatasetSpec("serve", args.images, args.width,
+                                   args.height, args.quality))
+    print(f"dataset: {args.images} x {args.width}x{args.height} "
+          f"q{args.quality} = {ds.compressed_mb:.2f} MB compressed")
+
+    for mode in ("jacobi", "faithful", "sequential"):
+        dec = ParallelDecoder.from_bytes(ds.jpeg_bytes,
+                                         chunk_bits=args.chunk_bits,
+                                         sync=mode)
+        # warmup/compile
+        out = dec.decode(emit="rgb")
+        out.rgb.block_until_ready()
+        t0 = time.time()
+        for _ in range(args.rounds):
+            out = dec.decode(emit="rgb")
+            out.rgb.block_until_ready()
+        dt = (time.time() - t0) / args.rounds
+        print(f"{mode:10s}: {dt*1e3:7.1f} ms/batch "
+              f"{ds.compressed_mb/dt:8.1f} MB/s "
+              f"{args.images/dt:7.1f} img/s (rounds={out.sync_rounds})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: multi-pod JAX training/inference framework built around
+fully device-resident JPEG decompression (Weissenberger & Schmidt, 2021)."""
+
+__version__ = "0.1.0"

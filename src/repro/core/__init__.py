@@ -1,0 +1,6 @@
+"""Core: the paper parallel JPEG decoding algorithm on accelerators."""
+
+from .api import DecodeOutput, ParallelDecoder, decode_batch  # noqa: F401
+from .bitstream import BatchPlan, build_batch_plan  # noqa: F401
+from .state import DecodeState  # noqa: F401
+from .sync import faithful_sync, jacobi_sync  # noqa: F401

@@ -1,0 +1,179 @@
+"""Public API: batched, fully device-resident JPEG decoding.
+
+Usage:
+    dec = ParallelDecoder.from_bytes(list_of_jpeg_blobs, chunk_bits=1024)
+    out = dec.decode(emit="rgb")          # DecodeOutput
+
+The decoder is a function from a batch of encoded bitstreams to arrays of
+pixels (per color channel), exactly as framed in the paper §IV. Only the
+compressed words + small metadata tables are transferred to the device.
+
+Sync schedules:   "jacobi" (default, beyond-paper), "faithful" (paper
+Algorithm 3), "sequential" (one chunk per segment — the per-image-parallel
+baseline that stands in for nvJPEG's hybrid mode; with a single image this
+is the libjpeg-style fully sequential baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import decode as D
+from .bitstream import BatchPlan, build_batch_plan
+from .state import DecodeState
+from .sync import SyncResult, faithful_sync, jacobi_sync, specmap_sync
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class DecodeOutput:
+    coeffs: Array                       # (U_total, 64) zig-zag, absolute DC
+    planes: Optional[List[Array]]       # per component (B, Hc, Wc) float32
+    rgb: Optional[Array]                # (B, H, W, 3) or (B, H, W) uint8
+    sync_rounds: int
+    converged: bool
+    plan: BatchPlan
+
+
+def _sequential_chunk_bits(blobs: Sequence[bytes]) -> int:
+    worst = max(len(b) for b in blobs) * 8  # scan is strictly shorter than file
+    return -(-worst // 32) * 32
+
+
+class ParallelDecoder:
+    """A compiled decoder for one batch *shape* (plan)."""
+
+    def __init__(self, plan: BatchPlan, sync: str = "jacobi",
+                 idct_impl=None):
+        assert sync in ("jacobi", "faithful", "sequential", "specmap")
+        self.plan = plan
+        self.sync = sync
+        self.dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        self._idct_impl = idct_impl or D.idct_units_folded
+        p = plan
+
+        @jax.jit
+        def _coeffs(dev: Dict[str, Array]):
+            if sync == "specmap":
+                from .bitstream import MAX_UPM
+                res = specmap_sync(
+                    dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
+                    max_upm=MAX_UPM, max_verify=p.n_chunks + 2,
+                )
+            elif sync == "jacobi":
+                res = jacobi_sync(
+                    dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
+                    max_rounds=p.n_chunks + 2,
+                )
+            elif sync == "faithful":
+                res = faithful_sync(
+                    dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
+                    seq_chunks=p.seq_chunks, max_outer=p.n_sequences + 2,
+                )
+            else:  # sequential: one chunk per segment -> cold start is exact
+                meta = D.chunk_meta(dev)
+                exits, _ = D.decode_span(
+                    dev, DecodeState.cold(dev["chunk_start"]),
+                    meta["word_base"], meta["limit"], meta["ts"], meta["upm"],
+                    s_max=p.s_max, min_code_bits=p.min_code_bits,
+                )
+                res = SyncResult(exits, jnp.asarray(1), jnp.asarray(True))
+
+            # Output placement (Alg. 1 lines 7-8) + write pass (lines 9-15).
+            bases = D.chunk_write_bases(dev, res.exits.n)
+            seg_end = jnp.concatenate([
+                dev["seg_coeff_base"][1:],
+                jnp.asarray([p.total_units * 64], dtype=jnp.int32),
+            ])
+            write_max = seg_end[dev["chunk_seg"]] - 1
+            entries = _entries_from(dev, res.exits)
+            meta = D.chunk_meta(dev)
+            out = jnp.zeros((p.total_units * 64,), jnp.int32)
+            _, out = D.decode_span(
+                dev, entries, meta["word_base"], meta["limit"], meta["ts"],
+                meta["upm"], s_max=p.s_max, min_code_bits=p.min_code_bits,
+                write=True, out=out, write_base=bases, write_max=write_max,
+            )
+            coeffs = out.reshape(p.total_units, 64)
+            coeffs = D.undiff_dc(dev, coeffs)
+            return coeffs, res.rounds, res.converged
+
+        self._coeffs_fn = _coeffs
+
+        if p.uniform:
+            g = p.geometry
+            comp_unit_idx = [jnp.asarray(a) for a in p.comp_unit_idx]
+            comp_block_idx = [jnp.asarray(a) for a in p.comp_block_idx]
+
+            @jax.jit
+            def _pixels(dev: Dict[str, Array], coeffs: Array):
+                pix = self._idct_impl(coeffs, dev["m_matrices"], dev["unit_mrow"])
+                planes = D.assemble_planes(
+                    pix, p.n_images, comp_unit_idx, comp_block_idx, p.comp_grid
+                )
+                rgb = D.upsample_color(
+                    planes, g.comp_h, g.comp_v, g.h_max, g.v_max,
+                    g.height, g.width,
+                )
+                return planes, rgb
+
+            self._pixels_fn = _pixels
+        else:
+            self._pixels_fn = None
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_bytes(cls, blobs: Sequence[bytes], chunk_bits: int = 1024,
+                   seq_chunks: int = 32, sync: str = "jacobi",
+                   idct_impl=None, use_kernels: bool = False) -> "ParallelDecoder":
+        if use_kernels and idct_impl is None:
+            from ..kernels.idct.ops import idct_units as idct_impl  # noqa: F811
+        if sync == "sequential":
+            chunk_bits = _sequential_chunk_bits(blobs)
+        plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
+                                seq_chunks=seq_chunks)
+        return cls(plan, sync=sync, idct_impl=idct_impl)
+
+    # -- execution ------------------------------------------------------------
+    def coefficients(self) -> DecodeOutput:
+        coeffs, rounds, conv = self._coeffs_fn(self.dev)
+        return DecodeOutput(coeffs, None, None, int(rounds), bool(conv), self.plan)
+
+    def decode(self, emit: str = "rgb") -> DecodeOutput:
+        out = self.coefficients()
+        if emit == "coeffs":
+            return out
+        if not self.plan.uniform:
+            raise NotImplementedError(
+                "pixel stage requires a geometry-uniform batch; decode images "
+                "with mixed geometry via bucketing in repro.data.jpeg_pipeline"
+            )
+        planes, rgb = self._pixels_fn(self.dev, out.coeffs)
+        return dataclasses.replace(
+            out, planes=planes, rgb=rgb if emit == "rgb" else None
+        )
+
+
+def _entries_from(dev, exits: DecodeState) -> DecodeState:
+    from .sync import chain_entries
+
+    return chain_entries(dev, exits)
+
+
+def decode_batch(
+    blobs: Sequence[bytes],
+    chunk_bits: int = 1024,
+    seq_chunks: int = 32,
+    sync: str = "jacobi",
+    emit: str = "rgb",
+) -> DecodeOutput:
+    """One-shot convenience wrapper (builds the plan + compiles + decodes)."""
+    return ParallelDecoder.from_bytes(
+        blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync
+    ).decode(emit=emit)

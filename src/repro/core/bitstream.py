@@ -1,0 +1,371 @@
+"""Host-side batch planning for the parallel JPEG decoder.
+
+Mirrors the paper's host responsibilities: parse headers, extract tables,
+unstuff the scan, and frame the bitstream into fixed-size *subsequences*
+("chunks") — only compressed bytes + small metadata cross the host→device
+link, which is the paper's whole point.
+
+Terminology:
+  segment  : an independently decodable entropy interval. One per image
+             normally; restart markers split an image into multiple segments
+             (each byte-aligned, DC prediction reset, MCU-aligned).
+  chunk    : a `chunk_bits`-sized subsequence of a segment (paper: s*32 bits).
+  sequence : `seq_chunks` adjacent chunks (paper: the thread-block unit b).
+  tableset : deduplicated (Huffman LUT schedule, units-per-MCU) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..jpeg import tables as T
+from ..jpeg.codec_ref import dct_matrix, scan_unit_layout
+from ..jpeg.format import JpegImage, parse_jpeg, pack_bits_to_words, unstuff_scan
+
+MAX_UPM = 6  # max data units per MCU we support (4:2:0 -> 4+1+1)
+
+
+# ---------------------------------------------------------------------------
+# Folded dequant + de-zigzag + IDCT operator (see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def folded_idct_matrix(quant_natural: np.ndarray) -> np.ndarray:
+    """M (64x64) with  pixels_rowmajor = M @ coeff_zigzag  (before +128/clamp).
+
+    M = (C^T (x) C^T) . diag(q_natural) . P_zigzag  — the paper's fused
+    zigzag+dequant+IDCT kernel folded into a single MXU matmul.
+    """
+    C = dct_matrix()
+    K = np.kron(C.T, C.T)  # vec_row(C^T F C) = (C^T (x) C^T) vec_row(F)
+    return (K @ np.diag(quant_natural.astype(np.float64)) @ T.ZIGZAG_PERM).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Plan dataclass
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ImageGeometry:
+    width: int
+    height: int
+    mcus_x: int
+    mcus_y: int
+    units_per_mcu: int
+    n_units: int
+    n_components: int
+    comp_h: Tuple[int, ...]
+    comp_v: Tuple[int, ...]
+    h_max: int
+    v_max: int
+
+    @staticmethod
+    def of(img: JpegImage) -> "ImageGeometry":
+        return ImageGeometry(
+            width=img.width,
+            height=img.height,
+            mcus_x=img.mcus_x,
+            mcus_y=img.mcus_y,
+            units_per_mcu=img.units_per_mcu,
+            n_units=img.n_units,
+            n_components=len(img.components),
+            comp_h=tuple(c.h for c in img.components),
+            comp_v=tuple(c.v for c in img.components),
+            h_max=img.h_max,
+            v_max=img.v_max,
+        )
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """Everything the device decoder needs, as host numpy arrays."""
+
+    # --- static (python) ---------------------------------------------------
+    chunk_bits: int
+    seq_chunks: int
+    s_max: int                      # decode loop bound per chunk
+    min_code_bits: int
+    n_images: int
+    n_segments: int
+    n_chunks: int
+    total_units: int
+    uniform: bool                   # all images share geometry
+    geometry: Optional[ImageGeometry]  # set when uniform
+
+    # --- shared tables -------------------------------------------------------
+    words: np.ndarray               # (W,) uint32 packed clean bitstreams
+    luts: np.ndarray                # (L, 65536) int32 decode LUTs
+    unit_lut_row: np.ndarray        # (TS, MAX_UPM, 2) int32; [...,0]=AC, [...,1]=DC
+    unit_comp_map: np.ndarray       # (TS, MAX_UPM) int32 component of unit slot
+    ts_upm: np.ndarray              # (TS,) int32 units per MCU
+
+    # --- per segment ---------------------------------------------------------
+    seg_word_base: np.ndarray       # (S,) int32 word index of segment start
+    seg_nbits: np.ndarray           # (S,) int32
+    seg_tableset: np.ndarray        # (S,) int32
+    seg_coeff_base: np.ndarray      # (S,) int64 dense coeff index of segment start
+    seg_image: np.ndarray           # (S,) int32
+
+    # --- per chunk -----------------------------------------------------------
+    chunk_seg: np.ndarray           # (C,) int32
+    chunk_start: np.ndarray         # (C,) int32 bit offset in segment
+    chunk_limit: np.ndarray         # (C,) int32 (end bit, clipped to seg_nbits)
+    chunk_first: np.ndarray         # (C,) bool first chunk of its segment
+    chunk_seq: np.ndarray           # (C,) int32 global sequence id
+    chunk_seq_first: np.ndarray     # (C,) bool first chunk of its sequence
+    n_sequences: int
+    seq_last_chunk: np.ndarray      # (Q,) int32 last chunk of each sequence
+
+    # --- per unit (entropy->pixel bridge) -------------------------------------
+    unit_comp: np.ndarray           # (U,) int32 component of each data unit
+    unit_seg_first: np.ndarray      # (U,) bool first unit of a segment (DC reset)
+    unit_mrow: np.ndarray           # (U,) int32 folded-IDCT matrix row id
+    unit_image: np.ndarray          # (U,) int32
+    m_matrices: np.ndarray          # (NQ, 64, 64) float32
+
+    # --- pixel stage (uniform batches) ----------------------------------------
+    comp_unit_idx: Optional[List[np.ndarray]]   # per comp: (Uc,) unit ids in image
+    comp_block_idx: Optional[List[np.ndarray]]  # per comp: (Uc,) raster block ids
+    comp_grid: Optional[List[Tuple[int, int]]]  # per comp: (blocks_y, blocks_x)
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        """The pytree of arrays shipped to the device (via jnp.asarray)."""
+        return {
+            "words": self.words,
+            "luts": self.luts,
+            "unit_lut_row": self.unit_lut_row,
+            "unit_comp_map": self.unit_comp_map,
+            "ts_upm": self.ts_upm,
+            "seg_word_base": self.seg_word_base,
+            "seg_nbits": self.seg_nbits,
+            "seg_tableset": self.seg_tableset,
+            "seg_coeff_base": self.seg_coeff_base.astype(np.int32),
+            "chunk_seg": self.chunk_seg,
+            "chunk_start": self.chunk_start,
+            "chunk_limit": self.chunk_limit,
+            "chunk_first": self.chunk_first,
+            "chunk_seq": self.chunk_seq,
+            "chunk_seq_first": self.chunk_seq_first,
+            "seq_last_chunk": self.seq_last_chunk,
+            "unit_comp": self.unit_comp,
+            "unit_seg_first": self.unit_seg_first,
+            "unit_mrow": self.unit_mrow,
+            "m_matrices": self.m_matrices,
+        }
+
+    @property
+    def compressed_bits(self) -> int:
+        return int(self.seg_nbits.sum())
+
+
+# ---------------------------------------------------------------------------
+# Plan builder
+# ---------------------------------------------------------------------------
+
+def _min_code_bits(specs) -> int:
+    m = 16
+    for spec in specs:
+        nz = np.nonzero(spec.bits)[0]
+        if len(nz):
+            m = min(m, int(nz[0]) + 1)
+    return max(1, m)
+
+
+def build_batch_plan(
+    blobs: Sequence[bytes],
+    chunk_bits: int = 1024,
+    seq_chunks: int = 32,
+    parsed: Optional[Sequence[JpegImage]] = None,
+) -> BatchPlan:
+    """Parse + frame a batch of JPEG files into a device-ready plan."""
+    assert chunk_bits % 32 == 0, "chunk size must be a multiple of 32 bits"
+    images = list(parsed) if parsed is not None else [parse_jpeg(b) for b in blobs]
+    n_images = len(images)
+    assert n_images > 0
+
+    # ---- dedupe Huffman LUTs ------------------------------------------------
+    lut_rows: Dict[Tuple[str, str], int] = {}   # (kind, digest) -> row
+    luts: List[np.ndarray] = []
+    all_specs = []
+
+    def lut_row_for(kind: str, spec) -> int:
+        key = (kind, spec.digest())
+        if key not in lut_rows:
+            lut_rows[key] = len(luts)
+            luts.append(T.build_decode_lut(spec, is_dc=(kind == "dc")))
+            all_specs.append(spec)
+        return lut_rows[key]
+
+    # ---- dedupe tablesets ----------------------------------------------------
+    ts_keys: Dict[Tuple, int] = {}
+    ts_lut_row: List[np.ndarray] = []
+    ts_comp: List[np.ndarray] = []
+    ts_upm: List[int] = []
+
+    def tableset_for(img: JpegImage) -> int:
+        ucomp = img.unit_component()
+        upm = img.units_per_mcu
+        assert upm <= MAX_UPM, f"units per MCU {upm} > {MAX_UPM}"
+        rows = np.zeros((MAX_UPM, 2), dtype=np.int32)
+        comps = np.zeros(MAX_UPM, dtype=np.int32)
+        key_parts: List = [upm]
+        for u in range(upm):
+            c = img.components[ucomp[u]]
+            ac = lut_row_for("ac", img.huffman_specs[("ac", c.ac_table)])
+            dc = lut_row_for("dc", img.huffman_specs[("dc", c.dc_table)])
+            rows[u, 0], rows[u, 1] = ac, dc
+            comps[u] = ucomp[u]
+            key_parts += [ac, dc, int(ucomp[u])]
+        key = tuple(key_parts)
+        if key not in ts_keys:
+            ts_keys[key] = len(ts_upm)
+            ts_lut_row.append(rows)
+            ts_comp.append(comps)
+            ts_upm.append(upm)
+        return ts_keys[key]
+
+    # ---- dedupe quant (folded IDCT) matrices ---------------------------------
+    m_keys: Dict[bytes, int] = {}
+    m_mats: List[np.ndarray] = []
+
+    def mrow_for(q: np.ndarray) -> int:
+        key = q.astype(np.int32).tobytes()
+        if key not in m_keys:
+            m_keys[key] = len(m_mats)
+            m_mats.append(folded_idct_matrix(q))
+        return m_keys[key]
+
+    # ---- walk images: segments, words, units ---------------------------------
+    word_chunks: List[np.ndarray] = []
+    word_pos = 0
+    seg_word_base, seg_nbits, seg_tableset, seg_image = [], [], [], []
+    seg_n_units: List[int] = []
+    unit_comp_l, unit_seg_first_l, unit_mrow_l, unit_image_l = [], [], [], []
+
+    geoms = [ImageGeometry.of(img) for img in images]
+    uniform = all(g == geoms[0] for g in geoms)
+
+    for ii, img in enumerate(images):
+        ts = tableset_for(img)
+        clean, rst_bits = unstuff_scan(img.scan_data)
+        upm = img.units_per_mcu
+        ucomp = img.unit_component()
+        comp_mrow = np.array(
+            [mrow_for(img.quant_tables[c.quant_id]) for c in img.components],
+            dtype=np.int32,
+        )
+        # segment boundaries in the clean stream (byte aligned)
+        bounds = [0] + [int(b) // 8 for b in rst_bits] + [len(clean)]
+        if img.restart_interval:
+            units_per_interval = img.restart_interval * upm
+        else:
+            units_per_interval = img.n_units
+        remaining_units = img.n_units
+        for si in range(len(bounds) - 1):
+            b0, b1 = bounds[si], bounds[si + 1]
+            seg_bytes = clean[b0:b1]
+            words = pack_bits_to_words(seg_bytes)
+            seg_word_base.append(word_pos)
+            word_chunks.append(words)
+            word_pos += len(words)
+            seg_nbits.append(len(seg_bytes) * 8)
+            seg_tableset.append(ts)
+            seg_image.append(ii)
+            n_u = min(units_per_interval, remaining_units)
+            remaining_units -= n_u
+            seg_n_units.append(n_u)
+            # per-unit metadata for this segment
+            uc = ucomp[np.arange(n_u) % upm]
+            unit_comp_l.append(uc)
+            first = np.zeros(n_u, dtype=bool)
+            first[0] = True
+            unit_seg_first_l.append(first)
+            unit_mrow_l.append(comp_mrow[uc])
+            unit_image_l.append(np.full(n_u, ii, dtype=np.int32))
+        assert remaining_units == 0, "restart segmentation lost units"
+
+    words = np.concatenate(word_chunks)
+    n_segments = len(seg_nbits)
+    seg_nbits = np.array(seg_nbits, dtype=np.int32)
+    seg_word_base = np.array(seg_word_base, dtype=np.int32)
+    seg_tableset = np.array(seg_tableset, dtype=np.int32)
+    seg_image = np.array(seg_image, dtype=np.int32)
+    seg_units = np.array(seg_n_units, dtype=np.int64)
+    seg_coeff_base = np.concatenate([[0], np.cumsum(seg_units)[:-1]]) * 64
+
+    # ---- chunk framing --------------------------------------------------------
+    seg_n_chunks = np.maximum(1, -(-seg_nbits // chunk_bits))
+    chunk_seg = np.repeat(np.arange(n_segments, dtype=np.int32), seg_n_chunks)
+    in_seg = np.concatenate([np.arange(k, dtype=np.int32) for k in seg_n_chunks])
+    chunk_start = in_seg * chunk_bits
+    chunk_limit = np.minimum(chunk_start + chunk_bits, seg_nbits[chunk_seg])
+    chunk_first = in_seg == 0
+    # sequences: groups of seq_chunks chunks, never straddling a segment
+    seq_in_seg = in_seg // seq_chunks
+    seg_n_seqs = -(-seg_n_chunks // seq_chunks)
+    seq_base = np.concatenate([[0], np.cumsum(seg_n_seqs)[:-1]])
+    chunk_seq = (seq_base[chunk_seg] + seq_in_seg).astype(np.int32)
+    chunk_seq_first = (in_seg % seq_chunks) == 0
+    n_sequences = int(seg_n_seqs.sum())
+    # last chunk id of each sequence
+    seq_last_chunk = np.zeros(n_sequences, dtype=np.int32)
+    seq_last_chunk[chunk_seq] = np.arange(len(chunk_seg), dtype=np.int32)
+
+    min_code = _min_code_bits(all_specs)
+    s_max = chunk_bits // min_code + 2
+
+    total_units = int(seg_units.sum())
+
+    # ---- pixel-stage layout (uniform batches) ---------------------------------
+    comp_unit_idx = comp_block_idx = comp_grid = None
+    geometry = geoms[0] if uniform else None
+    if uniform:
+        layout = scan_unit_layout(images[0])
+        comp_unit_idx, comp_block_idx, comp_grid = [], [], []
+        for ci, c in enumerate(images[0].components):
+            sel = np.where(layout["comp"] == ci)[0]
+            comp_unit_idx.append(sel.astype(np.int32))
+            comp_block_idx.append(layout["block_idx"][sel].astype(np.int32))
+            comp_grid.append((images[0].mcus_y * c.v, images[0].mcus_x * c.h))
+
+    return BatchPlan(
+        chunk_bits=chunk_bits,
+        seq_chunks=seq_chunks,
+        s_max=int(s_max),
+        min_code_bits=min_code,
+        n_images=n_images,
+        n_segments=n_segments,
+        n_chunks=int(len(chunk_seg)),
+        total_units=total_units,
+        uniform=uniform,
+        geometry=geometry,
+        words=words,
+        luts=np.stack(luts) if luts else np.zeros((1, 1 << 16), np.int32),
+        unit_lut_row=np.stack(ts_lut_row),
+        unit_comp_map=np.stack(ts_comp),
+        ts_upm=np.array(ts_upm, dtype=np.int32),
+        seg_word_base=seg_word_base,
+        seg_nbits=seg_nbits,
+        seg_tableset=seg_tableset,
+        seg_coeff_base=seg_coeff_base.astype(np.int64),
+        seg_image=seg_image,
+        chunk_seg=chunk_seg,
+        chunk_start=chunk_start.astype(np.int32),
+        chunk_limit=chunk_limit.astype(np.int32),
+        chunk_first=chunk_first,
+        chunk_seq=chunk_seq,
+        chunk_seq_first=chunk_seq_first,
+        n_sequences=n_sequences,
+        seq_last_chunk=seq_last_chunk,
+        unit_comp=np.concatenate(unit_comp_l).astype(np.int32),
+        unit_seg_first=np.concatenate(unit_seg_first_l),
+        unit_mrow=np.concatenate(unit_mrow_l).astype(np.int32),
+        unit_image=np.concatenate(unit_image_l),
+        m_matrices=np.stack(m_mats),
+        comp_unit_idx=comp_unit_idx,
+        comp_block_idx=comp_block_idx,
+        comp_grid=comp_grid,
+    )

@@ -1,0 +1,277 @@
+"""Device-side parallel JPEG decoding (pure JAX; Pallas variants in kernels/).
+
+The decode primitive is :func:`decode_span`: a bulk-synchronous, lane-
+vectorized version of the paper's ``decode_subsequence`` (Algorithm 2). One
+"lane" per chunk; each loop iteration decodes one Huffman symbol per lane via
+a 16-bit-lookahead LUT gather — the TPU-shaped equivalent of the CUDA
+per-thread bit loop (DESIGN.md §3).
+
+All functions take `dev`, the device pytree from BatchPlan.device_arrays().
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..jpeg import tables as T
+from .state import DecodeState
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Bit window fetch
+# ---------------------------------------------------------------------------
+
+def fetch_window32(words: jnp.ndarray, word_base: jnp.ndarray, p: jnp.ndarray):
+    """32-bit MSB-aligned window starting at bit `p` of each lane's segment."""
+    w = word_base + (p >> 5)
+    off = (p & 31).astype(U32)
+    hi = words[w]
+    lo = words[w + 1]
+    lo_shift = jnp.where(off == 0, U32(0), lo >> ((U32(32) - off) & U32(31)))
+    return (hi << off) | lo_shift
+
+
+# ---------------------------------------------------------------------------
+# One symbol decode step (vectorized over lanes)
+# ---------------------------------------------------------------------------
+
+class StepOut(NamedTuple):
+    state: DecodeState
+    coef: jnp.ndarray      # int32 decoded coefficient (0 for EOB/ZRL/garbage)
+    run: jnp.ndarray       # int32 effective zero-run before the coefficient
+    active: jnp.ndarray    # bool: this lane decoded a symbol this step
+    invalid: jnp.ndarray   # bool: window had no valid codeword (garbage phase)
+
+
+def decode_symbol(
+    dev: Dict[str, jnp.ndarray],
+    st: DecodeState,
+    word_base: jnp.ndarray,
+    limit: jnp.ndarray,
+    ts: jnp.ndarray,
+    upm: jnp.ndarray,
+    min_code_bits: int,
+) -> StepOut:
+    """decode_next_symbol() from the paper, for all lanes at once."""
+    active = st.p < limit
+    win32 = fetch_window32(dev["words"], word_base, st.p)
+    win16 = (win32 >> U32(16)).astype(I32)
+
+    is_dc = (st.z == 0).astype(I32)
+    row = dev["unit_lut_row"][ts, st.u, is_dc]
+    entry = dev["luts"][row, win16]
+
+    clen = entry & 0x1F
+    size = (entry >> T.LUT_SIZE_SHIFT) & 0xF
+    run = (entry >> T.LUT_RUN_SHIFT) & 0xF
+    eob = (entry & T.LUT_EOB_BIT) != 0
+    invalid = clen == 0
+
+    # magnitude bits: the `size` bits following the codeword
+    shift = (U32(32) - clen.astype(U32) - size.astype(U32)) & U32(31)
+    mask = (U32(1) << size.astype(U32)) - U32(1)
+    vbits = ((win32 >> shift) & mask).astype(I32)
+    half = jnp.left_shift(I32(1), jnp.maximum(size - 1, 0))
+    full = jnp.left_shift(I32(1), size)
+    coef = jnp.where(vbits < half, vbits - full + 1, vbits)
+    coef = jnp.where(size == 0, 0, coef)
+
+    run_eff = jnp.where(eob, 63 - st.z, run)
+    run_eff = jnp.where(invalid, 0, run_eff)
+    zstep = run_eff + 1
+    adv = jnp.where(invalid, min_code_bits, clen + size)
+
+    new_z = st.z + zstep
+    blk_done = new_z >= 64
+    z_next = jnp.where(blk_done, 0, new_z)
+    u_next = jnp.where(blk_done, jnp.where(st.u + 1 >= upm, 0, st.u + 1), st.u)
+
+    nxt = DecodeState(
+        p=jnp.where(active, st.p + adv, st.p),
+        u=jnp.where(active, u_next, st.u),
+        z=jnp.where(active, z_next, st.z),
+        n=jnp.where(active, st.n + zstep, st.n),
+    )
+    return StepOut(nxt, coef, run_eff, active, invalid)
+
+
+# ---------------------------------------------------------------------------
+# Chunk decode: the paper's decode_subsequence over all lanes
+# ---------------------------------------------------------------------------
+
+def decode_span(
+    dev: Dict[str, jnp.ndarray],
+    entry: DecodeState,
+    word_base: jnp.ndarray,
+    limit: jnp.ndarray,
+    ts: jnp.ndarray,
+    upm: jnp.ndarray,
+    *,
+    s_max: int,
+    min_code_bits: int,
+    write: bool = False,
+    out: Optional[jnp.ndarray] = None,
+    write_base: Optional[jnp.ndarray] = None,
+    write_max: Optional[jnp.ndarray] = None,
+) -> Tuple[DecodeState, Optional[jnp.ndarray]]:
+    """Decode every lane from its entry state to the end of its bit range.
+
+    Returns the exit states (with per-chunk n counts). When `write=True`,
+    coefficients are scattered into `out` at write_base + local_n + run and
+    the updated buffer is returned.
+    """
+    st0 = DecodeState(entry.p, entry.u, entry.z, jnp.zeros_like(entry.p))
+
+    if write:
+        assert out is not None and write_base is not None and write_max is not None
+
+        def body(_, carry):
+            st, buf = carry
+            o = decode_symbol(dev, st, word_base, limit, ts, upm, min_code_bits)
+            idx = write_base + st.n + o.run
+            ok = o.active & (~o.invalid) & (idx <= write_max)
+            # NB: sentinel must be past-the-end, not -1 (negative indices wrap).
+            idx = jnp.where(ok, idx, buf.shape[0])
+            buf = buf.at[idx].set(o.coef, mode="drop")
+            return o.state, buf
+
+        st, out = jax.lax.fori_loop(0, s_max, body, (st0, out))
+        return st, out
+
+    def body(_, st):
+        return decode_symbol(dev, st, word_base, limit, ts, upm, min_code_bits).state
+
+    st = jax.lax.fori_loop(0, s_max, body, st0)
+    return st, None
+
+
+def chunk_meta(dev: Dict[str, jnp.ndarray], idx: Optional[jnp.ndarray] = None):
+    """Gather per-chunk decode metadata (optionally at a chunk-index subset)."""
+    seg = dev["chunk_seg"] if idx is None else dev["chunk_seg"][idx]
+    limit = dev["chunk_limit"] if idx is None else dev["chunk_limit"][idx]
+    ts = dev["seg_tableset"][seg]
+    return dict(
+        word_base=dev["seg_word_base"][seg],
+        limit=limit,
+        ts=ts,
+        upm=dev["ts_upm"][ts],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Output placement: segmented exclusive prefix sum over per-chunk n
+# ---------------------------------------------------------------------------
+
+def _seg_scan_op(a, b):
+    (va, fa), (vb, fb) = a, b
+    return (jnp.where(fb, vb, va + vb), fa | fb)
+
+
+def segmented_exclusive_cumsum(values: jnp.ndarray, first_flags: jnp.ndarray):
+    """Exclusive per-segment prefix sum (paper Alg. 1 lines 7-8, batched)."""
+    shifted = jnp.concatenate([jnp.zeros_like(values[:1]), values[:-1]])
+    flags = jnp.concatenate([jnp.array([True]), first_flags[1:]])
+    # the first element of each segment must start the sum at 0
+    shifted = jnp.where(first_flags, 0, shifted)
+    out, _ = jax.lax.associative_scan(_seg_scan_op, (shifted, flags))
+    return out
+
+
+def chunk_write_bases(dev, exit_n: jnp.ndarray):
+    """Absolute dense-coefficient write base for every chunk."""
+    local = segmented_exclusive_cumsum(exit_n, dev["chunk_first"])
+    return dev["seg_coeff_base"][dev["chunk_seg"]] + local
+
+
+# ---------------------------------------------------------------------------
+# DC difference decoding (paper §IV-B): segmented prefix sum per component
+# ---------------------------------------------------------------------------
+
+def undiff_dc(dev, coeffs: jnp.ndarray, n_components: int = 3) -> jnp.ndarray:
+    """Reverse DC prediction over the flat (U, 64) zig-zag coefficient array."""
+    dc = coeffs[:, 0]
+    first = dev["unit_seg_first"]
+    total = jnp.zeros_like(dc)
+    for c in range(n_components):
+        mask = dev["unit_comp"] == c
+        vals = jnp.where(mask, dc, 0)
+        flags = first  # segment starts reset *all* component predictors
+        acc, _ = jax.lax.associative_scan(_seg_scan_op, (vals, flags))
+        total = jnp.where(mask, acc, total)
+    return coeffs.at[:, 0].set(total)
+
+
+# ---------------------------------------------------------------------------
+# Pixel stage: fused dequant + de-zigzag + IDCT as one matmul (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def idct_units_folded(
+    coeffs: jnp.ndarray, m_matrices: jnp.ndarray, unit_mrow: jnp.ndarray
+) -> jnp.ndarray:
+    """(U, 64) zig-zag int coeffs -> (U, 64) row-major pixel values (uint8 range).
+
+    Computes every folded matrix's transform and selects per unit — the
+    number of distinct quantization matrices per batch is tiny (usually 2),
+    and dense MXU matmuls beat per-unit gathers of 64x64 operands.
+    """
+    x = coeffs.astype(jnp.float32)
+    nq = m_matrices.shape[0]
+    out = jnp.zeros_like(x)
+    for q in range(nq):
+        y = x @ m_matrices[q].T
+        out = jnp.where((unit_mrow == q)[:, None], y, out)
+    return jnp.clip(jnp.round(out + 128.0), 0.0, 255.0)
+
+
+def assemble_planes(
+    pixels: jnp.ndarray,
+    n_images: int,
+    comp_unit_idx,
+    comp_block_idx,
+    comp_grid,
+):
+    """(U_total, 64) pixels -> list of per-component (B, Hc, Wc) planes.
+
+    Uniform-batch path: every image shares the same scan layout.
+    """
+    upi = pixels.shape[0] // n_images
+    pix = pixels.reshape(n_images, upi, 64)
+    planes = []
+    for ci in range(len(comp_unit_idx)):
+        sel = comp_unit_idx[ci]
+        blocks = pix[:, sel, :]  # (B, Uc, 64)
+        by, bx = comp_grid[ci]
+        plane = jnp.zeros((n_images, by * bx, 64), blocks.dtype)
+        plane = plane.at[:, comp_block_idx[ci], :].set(blocks)
+        plane = plane.reshape(n_images, by, bx, 8, 8)
+        plane = plane.transpose(0, 1, 3, 2, 4).reshape(n_images, by * 8, bx * 8)
+        planes.append(plane)
+    return planes
+
+
+def upsample_color(planes, comp_h, comp_v, h_max, v_max, height, width):
+    """Replicate-upsample chroma + YCbCr->RGB, cropped to true image size."""
+    if len(planes) == 1:
+        return jnp.round(planes[0][:, :height, :width]).astype(jnp.uint8)
+    full = []
+    for ci, p in enumerate(planes):
+        fv, fh = v_max // comp_v[ci], h_max // comp_h[ci]
+        if fv > 1:
+            p = jnp.repeat(p, fv, axis=1)
+        if fh > 1:
+            p = jnp.repeat(p, fh, axis=2)
+        full.append(p[:, : planes[0].shape[1] * (v_max // comp_v[0]),
+                      : planes[0].shape[2] * (h_max // comp_h[0])])
+    y, cb, cr = full[0], full[1] - 128.0, full[2] - 128.0
+    r = y + 1.402 * cr
+    g = y - 0.344136286 * cb - 0.714136286 * cr
+    b = y + 1.772 * cb
+    rgb = jnp.stack([r, g, b], axis=-1)
+    rgb = jnp.clip(jnp.round(rgb), 0, 255).astype(jnp.uint8)
+    return rgb[:, :height, :width]

@@ -1,0 +1,348 @@
+"""Decoder synchronization — the paper's core contribution (Algorithm 3).
+
+Two schedules are implemented over the same decode primitive:
+
+* :func:`faithful_sync` — the paper's two-level Gauss–Seidel overflow
+  pattern: a cold speculative decode of every subsequence, then
+  *intra-sequence* chains (one per subsequence, bounded by the sequence
+  extent, lockstep rounds = ``__syncthreads``), then *inter-sequence*
+  chains (one per sequence boundary) repeated by an outer loop until every
+  ``sequence_synced`` flag is set.
+
+* :func:`jacobi_sync` — the TPU-native bulk-synchronous variant (DESIGN.md
+  §3): iterate ``exit[i] <- decode(i, entry=exit[i-1])`` over *all* chunks
+  in parallel until fixed point. Self-synchronization bounds the number of
+  rounds by the maximum sync distance in chunks; convergence is checked on
+  the full state, so the result is the exact sequential parse by
+  construction.
+
+Both return bit-identical exit states (asserted in tests); they differ only
+in schedule, which is the point of the beyond-paper comparison.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .decode import chunk_meta, decode_span
+from .state import DecodeState
+
+
+class SyncResult(NamedTuple):
+    exits: DecodeState     # fixed-point exit state of every chunk
+    rounds: jnp.ndarray    # number of full decode rounds executed
+    converged: jnp.ndarray # bool
+
+
+def _shift_one(a: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([a[:1], a[:-1]])
+
+
+def chain_entries(dev: Dict[str, jnp.ndarray], exits: DecodeState) -> DecodeState:
+    """entry[i] = exit[i-1]; first chunk of a segment gets the true cold state."""
+    prev = DecodeState(
+        _shift_one(exits.p), _shift_one(exits.u), _shift_one(exits.z),
+        _shift_one(exits.n),
+    )
+    cold = DecodeState.cold(dev["chunk_start"])
+    first = dev["chunk_first"]
+    return cold.select(first, prev)
+
+
+def _states_equal(a: DecodeState, b: DecodeState) -> jnp.ndarray:
+    return jnp.all(a.puz_equal(b) & (a.n == b.n))
+
+
+def _gather(st: DecodeState, idx: jnp.ndarray) -> DecodeState:
+    return DecodeState(st.p[idx], st.u[idx], st.z[idx], st.n[idx])
+
+
+def _scatter_where(
+    st: DecodeState, idx: jnp.ndarray, new: DecodeState, ok: jnp.ndarray
+) -> DecodeState:
+    # NB: sentinel must be past-the-end, not -1 (negative indices wrap).
+    tgt = jnp.where(ok, idx, st.p.shape[0])
+    return DecodeState(
+        st.p.at[tgt].set(new.p, mode="drop"),
+        st.u.at[tgt].set(new.u, mode="drop"),
+        st.z.at[tgt].set(new.z, mode="drop"),
+        st.n.at[tgt].set(new.n, mode="drop"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Jacobi (bulk-synchronous) schedule
+# ---------------------------------------------------------------------------
+
+def jacobi_sync(
+    dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
+    max_rounds: int,
+) -> SyncResult:
+    meta = chunk_meta(dev)
+
+    def full_decode(entry: DecodeState) -> DecodeState:
+        st, _ = decode_span(
+            dev, entry, meta["word_base"], meta["limit"], meta["ts"],
+            meta["upm"], s_max=s_max, min_code_bits=min_code_bits,
+        )
+        return st
+
+    cold = DecodeState.cold(dev["chunk_start"])
+    exit0 = full_decode(cold)  # the paper's initial speculative pass
+
+    def cond(carry):
+        _, done, r = carry
+        return (~done) & (r < max_rounds)
+
+    def body(carry):
+        exits, _, r = carry
+        new = full_decode(chain_entries(dev, exits))
+        return new, _states_equal(new, exits), r + 1
+
+    exits, done, rounds = jax.lax.while_loop(
+        cond, body, (exit0, jnp.asarray(False), jnp.asarray(1))
+    )
+    return SyncResult(exits, rounds, done)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: phase-speculative map composition ("specmap")
+# ---------------------------------------------------------------------------
+#
+# Measurement (EXPERIMENTS.md §Perf) shows Jacobi/faithful round counts on
+# high-quality corpora are dominated by *MCU-phase* desynchronization: the
+# bit-position and zig-zag index self-synchronize within one subsequence,
+# but the intra-MCU unit index u (which selects luma vs chroma tables) is an
+# arbitrary constant offset that a cold (u=0) start guesses wrong — truth
+# then has to propagate one chunk per round.
+#
+# Fix: decode every chunk once per phase hypothesis u0 in {0..upm-1}. If the
+# bit lattice self-syncs within the chunk (the paper's own premise), the
+# chunk is summarized exactly by a small map u_entry -> (p,u,z,n)_exit.
+# Those maps compose associatively, so a parallel prefix scan resolves ALL
+# entry states in O(log n_chunks) steps — no sequential truth propagation.
+# Chunks where hypotheses fail to collapse in (p,z) are rare; the trailing
+# Jacobi verification rounds (shared with faithful_sync) repair them and
+# certify the exact sequential parse.
+
+def specmap_sync(
+    dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
+    max_upm: int, max_verify: int,
+) -> SyncResult:
+    C = dev["chunk_seg"].shape[0]
+    meta = chunk_meta(dev)
+    upm = meta["upm"]
+
+    # --- one decode per (chunk, phase hypothesis): upm*C lanes -------------
+    def decode_hyp(u0):
+        entry = DecodeState(
+            p=dev["chunk_start"],
+            u=jnp.minimum(jnp.full((C,), u0, jnp.int32), upm - 1),
+            z=jnp.zeros((C,), jnp.int32),
+            n=jnp.zeros((C,), jnp.int32),
+        )
+        st, _ = decode_span(dev, entry, meta["word_base"], meta["limit"],
+                            meta["ts"], meta["upm"], s_max=s_max,
+                            min_code_bits=min_code_bits)
+        return st
+
+    hyp = [decode_hyp(u0) for u0 in range(max_upm)]
+    # exits per hypothesis: (H, C)
+    ep = jnp.stack([h.p for h in hyp])
+    eu = jnp.stack([h.u for h in hyp])
+    ez = jnp.stack([h.z for h in hyp])
+    en = jnp.stack([h.n for h in hyp])
+
+    # --- compose phase maps with an associative scan ------------------------
+    # element i: map m_i[h] = exit-u of chunk i entered with phase h, plus a
+    # validity flag (chunk boundary-starts a segment => identity re-anchor).
+    first = dev["chunk_first"]
+    maps = eu  # (H, C) int32
+    idem = jnp.broadcast_to(jnp.arange(max_upm, dtype=jnp.int32)[:, None],
+                            (max_upm, C))
+    # segment-first chunks re-anchor: their true entry phase is 0 regardless
+    # of the prefix, so their map is constant m[h] = exit-u of hypothesis 0.
+    maps = jnp.where(first[None, :], jnp.broadcast_to(eu[0:1], eu.shape), maps)
+
+    def compose(a, b):
+        # (b after a): out[h] = b[a[h]]  — gather along the phase axis
+        return jnp.take_along_axis(b, a, axis=0)
+
+    prefix = jax.lax.associative_scan(compose, maps, axis=1)
+    # entry phase of chunk i = composed map of chunks [seg_start..i-1] at 0
+    entry_u = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), prefix[0, :-1]])
+    entry_u = jnp.where(first, 0, entry_u)
+
+    # --- select per-chunk exits for the resolved entry phase ---------------
+    sel = lambda arr: jnp.take_along_axis(arr, entry_u[None, :], axis=0)[0]
+    exits = DecodeState(sel(ep), sel(eu), sel(ez), sel(en))
+
+    # --- verification to the exact fixed point (repairs rare bit-phase
+    #     failures; counts as rounds like every other schedule) -------------
+    def full_decode(entry: DecodeState) -> DecodeState:
+        st, _ = decode_span(dev, entry, meta["word_base"], meta["limit"],
+                            meta["ts"], meta["upm"], s_max=s_max,
+                            min_code_bits=min_code_bits)
+        return st
+
+    def cond(carry):
+        _, done, r = carry
+        return (~done) & (r < max_verify)
+
+    def body(carry):
+        ex, _, r = carry
+        new = full_decode(chain_entries(dev, ex))
+        return new, _states_equal(new, ex), r + 1
+
+    exits, done, rounds = jax.lax.while_loop(
+        cond, body, (exits, jnp.asarray(False), jnp.asarray(max_upm)))
+    return SyncResult(exits, rounds, done)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful two-level schedule (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def faithful_sync(
+    dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
+    seq_chunks: int, max_outer: int, verify: bool = True,
+) -> SyncResult:
+    """Paper Algorithm 3, plus an optional verification fixed-point pass.
+
+    The paper's schedule can terminate with stale ``s_info`` entries when a
+    chain dies on a *spurious* match: two desynchronized parses that happen
+    to agree at a subsequence end (most likely with small subsequences /
+    small sequences). The original CUDA implementation accepts this
+    (astronomically rare at their sizes); for a production decoder we append
+    a Jacobi verification loop — one extra parallel round in the common case
+    — which guarantees the exact sequential parse. Set ``verify=False`` to
+    benchmark the paper's raw schedule.
+    """
+    C = dev["chunk_seg"].shape[0]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    meta_all = chunk_meta(dev)
+
+    def decode_at(targets: jnp.ndarray, entry: DecodeState) -> DecodeState:
+        m = chunk_meta(dev, targets)
+        st, _ = decode_span(
+            dev, entry, m["word_base"], m["limit"], m["ts"], m["upm"],
+            s_max=s_max, min_code_bits=min_code_bits,
+        )
+        return st
+
+    # ---- Phase 0: speculative cold decode of every subsequence ------------
+    cold = DecodeState.cold(dev["chunk_start"])
+    s_info, _ = decode_span(
+        dev, cold, meta_all["word_base"], meta_all["limit"], meta_all["ts"],
+        meta_all["upm"], s_max=s_max, min_code_bits=min_code_bits,
+    )
+    rounds = jnp.asarray(1)
+
+    # ---- Phase 1: intra-sequence chains (lockstep rounds) ------------------
+    def intra_cond(carry):
+        _, _, alive, t, _ = carry
+        return jnp.any(alive) & (t < seq_chunks)
+
+    def intra_body(carry):
+        s_info, chain, alive, t, r = carry
+        target = idx + t
+        tgt = jnp.clip(target, 0, C - 1)
+        valid = (
+            alive
+            & (target < C)
+            & (dev["chunk_seq"][tgt] == dev["chunk_seq"])  # same sequence
+        )
+        new = decode_at(tgt, chain)
+        synced = new.puz_equal(_gather(s_info, tgt))
+        s_info = _scatter_where(s_info, tgt, new, valid)
+        alive = valid & ~synced
+        return s_info, new, alive, t + 1, r + 1
+
+    chain0 = s_info
+    alive0 = jnp.ones(C, dtype=bool)
+    s_info, _, _, _, rounds = jax.lax.while_loop(
+        intra_cond, intra_body, (s_info, chain0, alive0, jnp.asarray(1), rounds)
+    )
+
+    # ---- Phase 2: inter-sequence chains, outer host loop --------------------
+    roots = dev["seq_last_chunk"]
+    Q = roots.shape[0]
+    root_seq = dev["chunk_seq"][roots]
+    root_seg = dev["chunk_seg"][roots]
+    next_chunk = jnp.clip(roots + 1, 0, C - 1)
+    # a boundary needs syncing only if the next chunk continues the same segment
+    needs = (roots + 1 < C) & (dev["chunk_seg"][next_chunk] == root_seg)
+    seq_synced0 = ~needs
+
+    def outer_cond(carry):
+        _, seq_synced, outer, r = carry
+        return (~jnp.all(seq_synced)) & (outer < max_outer)
+
+    def outer_body(carry):
+        s_info, seq_synced, outer, r = carry
+        chain = _gather(s_info, roots)
+
+        def inner_cond(c):
+            _, _, alive, _, t, _ = c
+            return jnp.any(alive) & (t <= seq_chunks)
+
+        def inner_body(c):
+            s_info, chain, alive, found, t, r = c
+            target = roots + t
+            tgt = jnp.clip(target, 0, C - 1)
+            valid = (
+                alive
+                & (target < C)
+                & (dev["chunk_seg"][tgt] == root_seg)           # same segment
+                & (dev["chunk_seq"][tgt] == root_seq + 1)        # next sequence only
+            )
+            new = decode_at(tgt, chain)
+            synced = new.puz_equal(_gather(s_info, tgt))
+            s_info = _scatter_where(s_info, tgt, new, valid)
+            found = found | (valid & synced)
+            alive = valid & ~synced
+            return s_info, new, alive, found, t + 1, r + 1
+
+        alive = ~seq_synced
+        found0 = jnp.zeros_like(seq_synced)
+        s_info, chain, _, found, _, r = jax.lax.while_loop(
+            inner_cond, inner_body,
+            (s_info, chain, alive, found0, jnp.asarray(1), r),
+        )
+        # only boundaries whose chain *detected* a sync point are done; chains
+        # that ran off the end of the next sequence retry in the next outer
+        # round with the (by then corrected) s_info — the paper's host loop.
+        seq_synced = seq_synced | found
+        return s_info, seq_synced, outer + 1, r
+
+    s_info, seq_synced, _, rounds = jax.lax.while_loop(
+        outer_cond, outer_body, (s_info, seq_synced0, jnp.asarray(0), rounds)
+    )
+    if not verify:
+        return SyncResult(s_info, rounds, jnp.all(seq_synced))
+
+    # ---- Verification: run the chain recurrence to its true fixed point ----
+    def full_decode(entry: DecodeState) -> DecodeState:
+        st, _ = decode_span(
+            dev, entry, meta_all["word_base"], meta_all["limit"],
+            meta_all["ts"], meta_all["upm"], s_max=s_max,
+            min_code_bits=min_code_bits,
+        )
+        return st
+
+    def v_cond(carry):
+        _, done, r = carry
+        return (~done) & (r < rounds + C + 2)
+
+    def v_body(carry):
+        exits, _, r = carry
+        new = full_decode(chain_entries(dev, exits))
+        return new, _states_equal(new, exits), r + 1
+
+    s_info, done, rounds = jax.lax.while_loop(
+        v_cond, v_body, (s_info, jnp.asarray(False), rounds)
+    )
+    return SyncResult(s_info, rounds, done)

@@ -1,0 +1,4 @@
+"""JPEG substrate: format parsing, coding tables, reference codec."""
+
+from .format import JpegImage, parse_jpeg, write_jpeg  # noqa: F401
+from .codec_ref import decode_baseline, encode_baseline  # noqa: F401

@@ -1,0 +1,338 @@
+"""JFIF/JPEG container: marker segment writer and parser (baseline SOF0).
+
+Host-side. The parser produces a :class:`JpegImage` with everything the
+device decoder needs: frame geometry, per-component sampling/table ids, the
+quantization and Huffman table *contents*, and the (still byte-stuffed)
+entropy-coded scan payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .tables import INV_ZIGZAG, ZIGZAG, HuffmanSpec
+
+# Marker bytes (second byte; first is always 0xFF).
+M_SOI = 0xD8
+M_EOI = 0xD9
+M_SOS = 0xDA
+M_DQT = 0xDB
+M_DHT = 0xC4
+M_SOF0 = 0xC0
+M_APP0 = 0xE0
+M_DRI = 0xDD
+M_COM = 0xFE
+M_RST0 = 0xD0  # .. 0xD7
+
+
+@dataclasses.dataclass
+class ComponentInfo:
+    comp_id: int          # component identifier (1=Y, 2=Cb, 3=Cr by convention)
+    h: int                # horizontal sampling factor
+    v: int                # vertical sampling factor
+    quant_id: int         # quantization table selector
+    dc_table: int = 0     # Huffman DC table selector (from SOS)
+    ac_table: int = 0     # Huffman AC table selector (from SOS)
+
+
+@dataclasses.dataclass
+class JpegImage:
+    """Parsed baseline JPEG."""
+
+    width: int
+    height: int
+    components: List[ComponentInfo]
+    quant_tables: Dict[int, np.ndarray]          # id -> (64,) natural order
+    huffman_specs: Dict[Tuple[str, int], HuffmanSpec]  # ("dc"/"ac", id) -> spec
+    scan_data: bytes                              # entropy-coded, byte-stuffed
+    restart_interval: int = 0                     # MCUs between RST markers (0=off)
+
+    # --- Derived geometry -------------------------------------------------
+    @property
+    def h_max(self) -> int:
+        return max(c.h for c in self.components)
+
+    @property
+    def v_max(self) -> int:
+        return max(c.v for c in self.components)
+
+    @property
+    def mcu_width(self) -> int:
+        return 8 * self.h_max
+
+    @property
+    def mcu_height(self) -> int:
+        return 8 * self.v_max
+
+    @property
+    def mcus_x(self) -> int:
+        return -(-self.width // self.mcu_width)
+
+    @property
+    def mcus_y(self) -> int:
+        return -(-self.height // self.mcu_height)
+
+    @property
+    def n_mcus(self) -> int:
+        return self.mcus_x * self.mcus_y
+
+    @property
+    def units_per_mcu(self) -> int:
+        return sum(c.h * c.v for c in self.components)
+
+    @property
+    def n_units(self) -> int:
+        return self.n_mcus * self.units_per_mcu
+
+    def comp_plane_shape(self, ci: int) -> Tuple[int, int]:
+        """Padded (height, width) of component ci's sample plane."""
+        c = self.components[ci]
+        return (self.mcus_y * c.v * 8, self.mcus_x * c.h * 8)
+
+    def unit_component(self) -> np.ndarray:
+        """(units_per_mcu,) component index for each data unit within an MCU."""
+        out = []
+        for ci, c in enumerate(self.components):
+            out.extend([ci] * (c.h * c.v))
+        return np.array(out, dtype=np.int32)
+
+    def subsampling_name(self) -> str:
+        if len(self.components) == 1:
+            return "gray"
+        key = (self.components[0].h, self.components[0].v)
+        return {(1, 1): "4:4:4", (2, 1): "4:2:2", (2, 2): "4:2:0"}.get(key, f"{key}")
+
+
+# ---------------------------------------------------------------------------
+# Writer
+# ---------------------------------------------------------------------------
+
+def _seg(marker: int, payload: bytes) -> bytes:
+    return bytes([0xFF, marker]) + (len(payload) + 2).to_bytes(2, "big") + payload
+
+
+def write_jpeg(
+    width: int,
+    height: int,
+    components: List[ComponentInfo],
+    quant_tables: Dict[int, np.ndarray],
+    huffman_specs: Dict[Tuple[str, int], HuffmanSpec],
+    scan_data: bytes,
+    restart_interval: int = 0,
+    comment: Optional[bytes] = None,
+) -> bytes:
+    """Assemble a complete baseline JFIF byte stream."""
+    out = bytearray()
+    out += bytes([0xFF, M_SOI])
+    # APP0 / JFIF header
+    app0 = b"JFIF\x00" + bytes([1, 2, 0]) + (1).to_bytes(2, "big") * 2 + bytes([0, 0])
+    out += _seg(M_APP0, app0)
+    if comment:
+        out += _seg(M_COM, comment)
+    # DQT segments (natural order in memory -> zig-zag order on the wire)
+    for qid, q in sorted(quant_tables.items()):
+        q = np.asarray(q).reshape(64)
+        payload = bytes([qid & 0xF]) + bytes(int(q[ZIGZAG[k]]) for k in range(64))
+        out += _seg(M_DQT, payload)
+    # SOF0
+    sof = bytes([8]) + height.to_bytes(2, "big") + width.to_bytes(2, "big")
+    sof += bytes([len(components)])
+    for c in components:
+        sof += bytes([c.comp_id, (c.h << 4) | c.v, c.quant_id])
+    out += _seg(M_SOF0, sof)
+    # DHT segments
+    for (kind, tid), spec in sorted(huffman_specs.items()):
+        tc = 0 if kind == "dc" else 1
+        payload = bytes([(tc << 4) | tid])
+        payload += bytes(int(b) for b in spec.bits)
+        payload += bytes(int(v) for v in spec.vals)
+        out += _seg(M_DHT, payload)
+    if restart_interval:
+        out += _seg(M_DRI, restart_interval.to_bytes(2, "big"))
+    # SOS
+    sos = bytes([len(components)])
+    for c in components:
+        sos += bytes([c.comp_id, (c.dc_table << 4) | c.ac_table])
+    sos += bytes([0, 63, 0])  # spectral selection + approximation (baseline)
+    out += _seg(M_SOS, sos)
+    out += scan_data
+    out += bytes([0xFF, M_EOI])
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------------
+# Parser
+# ---------------------------------------------------------------------------
+
+class JpegFormatError(ValueError):
+    pass
+
+
+def parse_jpeg(data: bytes) -> JpegImage:
+    """Parse a baseline (SOF0) JFIF stream into a JpegImage."""
+    if len(data) < 4 or data[0] != 0xFF or data[1] != M_SOI:
+        raise JpegFormatError("missing SOI")
+    pos = 2
+    quant_tables: Dict[int, np.ndarray] = {}
+    huffman_specs: Dict[Tuple[str, int], HuffmanSpec] = {}
+    components: List[ComponentInfo] = []
+    width = height = 0
+    restart_interval = 0
+    scan_data: Optional[bytes] = None
+
+    while pos < len(data):
+        if data[pos] != 0xFF:
+            raise JpegFormatError(f"expected marker at {pos}, got {data[pos]:#x}")
+        marker = data[pos + 1]
+        pos += 2
+        if marker == M_EOI:
+            break
+        if marker == M_SOI or (M_RST0 <= marker <= M_RST0 + 7):
+            continue  # parameterless
+        seg_len = int.from_bytes(data[pos : pos + 2], "big")
+        payload = data[pos + 2 : pos + seg_len]
+        if marker == M_DQT:
+            p = 0
+            while p < len(payload):
+                pq, tq = payload[p] >> 4, payload[p] & 0xF
+                p += 1
+                if pq != 0:
+                    raise JpegFormatError("16-bit quant tables unsupported")
+                zz = np.frombuffer(payload[p : p + 64], dtype=np.uint8).astype(np.int32)
+                q = np.zeros(64, dtype=np.int32)
+                q[ZIGZAG[np.arange(64)]] = zz  # wire is zig-zag order
+                quant_tables[tq] = q
+                p += 64
+        elif marker == M_DHT:
+            p = 0
+            while p < len(payload):
+                tc, th = payload[p] >> 4, payload[p] & 0xF
+                p += 1
+                bits = np.frombuffer(payload[p : p + 16], dtype=np.uint8).astype(np.int32)
+                p += 16
+                n = int(bits.sum())
+                vals = np.frombuffer(payload[p : p + n], dtype=np.uint8).astype(np.int32)
+                p += n
+                huffman_specs[("dc" if tc == 0 else "ac", th)] = HuffmanSpec(bits, vals)
+        elif marker == M_SOF0:
+            height = int.from_bytes(payload[1:3], "big")
+            width = int.from_bytes(payload[3:5], "big")
+            ncomp = payload[5]
+            for i in range(ncomp):
+                cid, hv, tq = payload[6 + 3 * i : 9 + 3 * i]
+                components.append(ComponentInfo(cid, hv >> 4, hv & 0xF, tq))
+        elif marker in (0xC1, 0xC2, 0xC3, 0xC5, 0xC6, 0xC7, 0xC9, 0xCA, 0xCB,
+                        0xCD, 0xCE, 0xCF):
+            raise JpegFormatError(
+                f"non-baseline SOF marker 0xFF{marker:02X} unsupported (baseline only)"
+            )
+        elif marker == M_DRI:
+            restart_interval = int.from_bytes(payload[:2], "big")
+        elif marker == M_SOS:
+            ns = payload[0]
+            for i in range(ns):
+                cs, tables = payload[1 + 2 * i], payload[2 + 2 * i]
+                for c in components:
+                    if c.comp_id == cs:
+                        c.dc_table = tables >> 4
+                        c.ac_table = tables & 0xF
+                        break
+                else:
+                    raise JpegFormatError(f"SOS references unknown component {cs}")
+            # Entropy-coded data runs until the next non-RST marker.
+            scan_start = pos + seg_len
+            scan_data, pos = _extract_scan(data, scan_start)
+            continue  # pos already advanced past the scan
+        pos += seg_len
+    if scan_data is None:
+        raise JpegFormatError("no SOS/scan found")
+    if not components:
+        raise JpegFormatError("no SOF0 found")
+    return JpegImage(
+        width=width,
+        height=height,
+        components=components,
+        quant_tables=quant_tables,
+        huffman_specs=huffman_specs,
+        scan_data=scan_data,
+        restart_interval=restart_interval,
+    )
+
+
+def _extract_scan(data: bytes, start: int) -> Tuple[bytes, int]:
+    """Return (scan bytes incl. RST markers and stuffing, position of next marker)."""
+    buf = np.frombuffer(data, dtype=np.uint8)
+    pos = start
+    n = len(data)
+    # Vectorized search: candidate marker positions are 0xFF followed by a byte
+    # that is neither 0x00 (stuffing) nor RSTn.
+    ff = np.where(buf[start:] == 0xFF)[0] + start
+    for f in ff:
+        if f + 1 >= n:
+            pos = n
+            break
+        nxt = buf[f + 1]
+        if nxt == 0x00 or (M_RST0 <= nxt <= M_RST0 + 7):
+            continue
+        return data[start:f], int(f)
+    return data[start:n], n
+
+
+# ---------------------------------------------------------------------------
+# Scan payload transforms
+# ---------------------------------------------------------------------------
+
+def unstuff_scan(scan: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    """Remove byte stuffing (0xFF 0x00 -> 0xFF) and RST markers.
+
+    Returns (clean_bytes uint8 array, rst_positions) where rst_positions[i] is
+    the *bit* offset in the clean stream at which the i-th restart interval
+    begins (empty when no RST markers present). RST markers byte-align the
+    stream, so clean-stream intervals start at byte boundaries.
+    """
+    buf = np.frombuffer(scan, dtype=np.uint8)
+    if len(buf) == 0:
+        return buf.copy(), np.zeros(0, dtype=np.int64)
+    ff = buf == 0xFF
+    prev_ff = np.concatenate([[False], ff[:-1]])
+    is_stuff = prev_ff & (buf == 0x00)
+    is_rst_second = prev_ff & (buf >= 0xD0) & (buf <= 0xD7)
+    is_rst_first = np.concatenate([is_rst_second[1:], [False]]) & ff
+    keep = ~(is_stuff | is_rst_second | is_rst_first)
+    clean = buf[keep]
+    if is_rst_first.any():
+        # Byte index (in clean stream) where each interval after a RST starts.
+        kept_before = np.cumsum(keep) - keep  # clean index of each original byte
+        starts = kept_before[np.where(is_rst_second)[0]]  # next kept byte index
+        rst_bits = (starts.astype(np.int64)) * 8
+    else:
+        rst_bits = np.zeros(0, dtype=np.int64)
+    return clean.copy(), rst_bits
+
+
+def stuff_scan(clean: np.ndarray) -> bytes:
+    """Apply byte stuffing: insert 0x00 after every 0xFF."""
+    clean = np.asarray(clean, dtype=np.uint8)
+    n_ff = int((clean == 0xFF).sum())
+    if n_ff == 0:
+        return clean.tobytes()
+    out = np.zeros(len(clean) + n_ff, dtype=np.uint8)
+    idx = np.arange(len(clean)) + np.concatenate([[0], np.cumsum(clean == 0xFF)[:-1]])
+    out[idx] = clean
+    # inserted positions default to 0x00 already
+    return out.tobytes()
+
+
+def pack_bits_to_words(clean: np.ndarray, pad_words: int = 2) -> np.ndarray:
+    """Pack a clean byte stream into big-endian uint32 words (MSB-first bits).
+
+    `pad_words` extra zero words are appended so window fetches near the end
+    never index out of bounds.
+    """
+    clean = np.asarray(clean, dtype=np.uint8)
+    pad = (-len(clean)) % 4
+    padded = np.concatenate([clean, np.zeros(pad, dtype=np.uint8)])
+    words = padded.view(">u4").astype(np.uint32)
+    return np.concatenate([words, np.zeros(pad_words, dtype=np.uint32)])

@@ -1,0 +1,27 @@
+"""Oracle for the fused upsample + YCbCr->RGB kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def upsample_color_ref(
+    y: jnp.ndarray,   # (B, H, W) float32 luma plane
+    cb: jnp.ndarray,  # (B, H/fv, W/fh) float32
+    cr: jnp.ndarray,  # (B, H/fv, W/fh)
+    fh: int,
+    fv: int,
+) -> jnp.ndarray:
+    """(B, H, W, 3) uint8 RGB with replicate upsampling (JFIF/BT.601)."""
+    if fv > 1:
+        cb = jnp.repeat(cb, fv, axis=1)
+        cr = jnp.repeat(cr, fv, axis=1)
+    if fh > 1:
+        cb = jnp.repeat(cb, fh, axis=2)
+        cr = jnp.repeat(cr, fh, axis=2)
+    cb = cb[:, : y.shape[1], : y.shape[2]] - 128.0
+    cr = cr[:, : y.shape[1], : y.shape[2]] - 128.0
+    r = y + 1.402 * cr
+    g = y - 0.344136286 * cb - 0.714136286 * cr
+    b = y + 1.772 * cb
+    rgb = jnp.stack([r, g, b], axis=-1)
+    return jnp.clip(jnp.round(rgb), 0, 255).astype(jnp.uint8)

@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: LUT-driven JPEG subsequence decoding.
+
+One lane per subsequence (chunk). The CUDA original runs a divergent
+per-thread bit loop; the TPU-native shape (DESIGN.md §3) is a lane-
+vectorized loop with three primitives per symbol:
+
+  1. 32-bit window fetch from the lane's *local* word window (the wrapper
+     pre-gathers each chunk's words into a (C, W) tile so the kernel's
+     VMEM working set is a regular BlockSpec tile, not scattered HBM),
+  2. one 2^16-entry LUT gather (the decode table lives in VMEM: 256 KiB per
+     distinct Huffman table — the dominant VMEM tenant),
+  3. integer state update (p, u, z, n) under an activity mask.
+
+VMEM per grid step (TILE_C=1024 lanes, 1024-bit chunks, 4 LUTs):
+  words  (1024, 34) u32 ~ 136 KiB
+  luts   4*65536    i32 = 1  MiB
+  rows   (1024, 12) i32 ~ 48 KiB
+  states 6*(1024,)  i32 ~ 24 KiB          total ~1.2 MiB << 16 MiB VMEM.
+
+TPU lowering note: the LUT lookup and the per-lane word fetch are dynamic
+VMEM gathers (Mosaic `vector.gather`); supported on v4+/v5 — on older
+toolchains the word fetch can fall back to a masked O(W) reduction. The
+kernel body is validated in interpret mode against the pure-jnp decoder
+(itself bit-exact vs the sequential oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...jpeg import tables as T
+
+TILE_C = 1024
+U32 = jnp.uint32
+
+
+def _kernel(
+    words_ref,    # (TILE_C, W) uint32 per-lane word windows
+    luts_ref,     # (L * 65536,) int32 flattened decode LUTs
+    rows_ref,     # (TILE_C, 2*MAX_UPM) int32 LUT row per (u, is_dc)
+    meta_ref,     # (TILE_C, 4) int32: [p_entry, u_entry, z_entry, limit_local]
+    upm_ref,      # (TILE_C, 1) int32
+    out_ref,      # (TILE_C, 4) int32: exit [p, u, z, n] (p local to chunk)
+    *,
+    s_max: int,
+    min_code_bits: int,
+    max_upm: int,
+):
+    words = words_ref[...]
+    lanes = jnp.arange(words.shape[0], dtype=jnp.int32)
+    p0 = meta_ref[:, 0]
+    u0 = meta_ref[:, 1]
+    z0 = meta_ref[:, 2]
+    limit = meta_ref[:, 3]
+    upm = upm_ref[:, 0]
+
+    def fetch32(p):
+        w = p >> 5
+        off = (p & 31).astype(U32)
+        hi = words[lanes, w]
+        lo = words[lanes, w + 1]
+        lo_shift = jnp.where(off == 0, U32(0), lo >> ((U32(32) - off) & U32(31)))
+        return (hi << off) | lo_shift
+
+    def body(_, carry):
+        p, u, z, n = carry
+        active = p < limit
+        win32 = fetch32(p)
+        win16 = (win32 >> U32(16)).astype(jnp.int32)
+        is_dc = (z == 0).astype(jnp.int32)
+        row = rows_ref[lanes, u * 2 + is_dc]
+        entry = luts_ref[row * 65536 + win16]
+
+        clen = entry & 0x1F
+        size = (entry >> T.LUT_SIZE_SHIFT) & 0xF
+        run = (entry >> T.LUT_RUN_SHIFT) & 0xF
+        eob = (entry & T.LUT_EOB_BIT) != 0
+        invalid = clen == 0
+
+        run_eff = jnp.where(eob, 63 - z, run)
+        run_eff = jnp.where(invalid, 0, run_eff)
+        zstep = run_eff + 1
+        adv = jnp.where(invalid, min_code_bits, clen + size)
+
+        new_z = z + zstep
+        blk = new_z >= 64
+        z_n = jnp.where(blk, 0, new_z)
+        u_n = jnp.where(blk, jnp.where(u + 1 >= upm, 0, u + 1), u)
+        return (
+            jnp.where(active, p + adv, p),
+            jnp.where(active, u_n, u),
+            jnp.where(active, z_n, z),
+            jnp.where(active, n + zstep, n),
+        )
+
+    p, u, z, n = jax.lax.fori_loop(
+        0, s_max, body, (p0, u0, z0, jnp.zeros_like(p0))
+    )
+    out_ref[:, 0] = p
+    out_ref[:, 1] = u
+    out_ref[:, 2] = z
+    out_ref[:, 3] = n
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s_max", "min_code_bits", "chunk_words", "interpret")
+)
+def decode_exits_pallas(
+    words: jnp.ndarray,        # (W_total,) uint32 global word buffer
+    luts: jnp.ndarray,         # (L, 65536) int32
+    lut_rows: jnp.ndarray,     # (C, MAX_UPM, 2) int32 per-chunk schedule
+    word_base: jnp.ndarray,    # (C,) int32 segment word base per chunk
+    chunk_start: jnp.ndarray,  # (C,) int32 bit offset of chunk in segment
+    entry_p: jnp.ndarray,      # (C,) absolute (segment-relative) entry bit
+    entry_u: jnp.ndarray,
+    entry_z: jnp.ndarray,
+    limit: jnp.ndarray,        # (C,) segment-relative end bit
+    upm: jnp.ndarray,          # (C,)
+    *,
+    s_max: int,
+    min_code_bits: int,
+    chunk_words: int,
+    interpret: bool = True,
+):
+    """Returns exit (p, u, z, n); p is segment-relative like the input."""
+    c = entry_p.shape[0]
+    w = chunk_words + 2  # +1 straddle word, +1 safety
+
+    # Pre-gather each chunk's word window: (C, W). Chunks are 32-bit aligned.
+    first_word = word_base + (chunk_start >> 5)
+    gidx = first_word[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    gidx = jnp.minimum(gidx, words.shape[0] - 1)
+    local_words = words[gidx]
+
+    pad = (-c) % TILE_C
+    def padc(a, v=0):
+        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=v)
+
+    local_words = padc(local_words)
+    meta = jnp.stack(
+        [entry_p - chunk_start, entry_u, entry_z, limit - chunk_start], axis=1
+    )
+    meta = padc(meta)
+    rows = padc(lut_rows.reshape(c, -1))
+    upm2 = padc(jnp.maximum(upm, 1)[:, None], v=1)
+
+    n_tiles = (c + pad) // TILE_C
+    max_upm = lut_rows.shape[1]
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, s_max=s_max, min_code_bits=min_code_bits, max_upm=max_upm
+        ),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE_C, w), lambda i: (i, 0)),
+            pl.BlockSpec((luts.size,), lambda i: (0,)),
+            pl.BlockSpec((TILE_C, 2 * max_upm), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_C, 4), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_C, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_C, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c + pad, 4), jnp.int32),
+        interpret=interpret,
+    )(local_words, luts.reshape(-1), rows, meta, upm2)
+
+    out = out[:c]
+    return (
+        out[:, 0] + chunk_start,  # back to segment-relative bits
+        out[:, 1],
+        out[:, 2],
+        out[:, 3],
+    )

@@ -1,0 +1,41 @@
+"""Jitted wrapper integrating the Pallas subsequence decoder with the core
+decoder's data layout (drop-in for the sync-phase decode_span)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ...core.state import DecodeState
+from .huffman import decode_exits_pallas
+from .ref import decode_exits_ref  # noqa: F401  (re-exported oracle)
+
+
+def decode_exits(
+    dev: Dict[str, jnp.ndarray],
+    entry: DecodeState,
+    *,
+    s_max: int,
+    min_code_bits: int,
+    chunk_bits: int,
+    interpret: bool = True,
+) -> DecodeState:
+    seg = dev["chunk_seg"]
+    ts = dev["seg_tableset"][seg]
+    p, u, z, n = decode_exits_pallas(
+        dev["words"],
+        dev["luts"],
+        dev["unit_lut_row"][ts],
+        dev["seg_word_base"][seg],
+        dev["chunk_start"],
+        entry.p,
+        entry.u,
+        entry.z,
+        dev["chunk_limit"],
+        dev["ts_upm"][ts],
+        s_max=s_max,
+        min_code_bits=min_code_bits,
+        chunk_words=chunk_bits // 32,
+        interpret=interpret,
+    )
+    return DecodeState(p, u, z, n)

@@ -1,0 +1,32 @@
+"""Oracle for the Huffman subsequence-decode kernel.
+
+The reference is the (bit-exact-vs-sequential-oracle, property-tested)
+pure-jnp decoder in repro.core.decode — the kernel must reproduce its exit
+states exactly for arbitrary entry states.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ...core.decode import decode_span
+from ...core.state import DecodeState
+
+
+def decode_exits_ref(
+    dev: Dict[str, jnp.ndarray],
+    entry: DecodeState,
+    word_base: jnp.ndarray,
+    limit: jnp.ndarray,
+    ts: jnp.ndarray,
+    upm: jnp.ndarray,
+    *,
+    s_max: int,
+    min_code_bits: int,
+) -> DecodeState:
+    exits, _ = decode_span(
+        dev, entry, word_base, limit, ts, upm,
+        s_max=s_max, min_code_bits=min_code_bits,
+    )
+    return exits

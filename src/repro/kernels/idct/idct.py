@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused dequantize + de-zigzag + 2-D IDCT.
+
+The paper implements this stage as one CUDA kernel with a thread per 8x8
+data unit. The TPU-native formulation (DESIGN.md §3) folds the whole stage
+into a single matmul: ``pixels = M @ zigzag_coeffs`` with
+``M = (C^T (x) C^T) diag(q) P``. To feed the 128x128 MXU at full tile width
+we additionally *pair* adjacent units: two 64-vectors concatenate to a
+128-lane row and M is block-diagonalized to (128, 128). Quantization-table
+selection is a per-unit mask over the (tiny) set of distinct tables.
+
+VMEM budget per grid step (TILE_U=512, NQ=2, f32):
+  x tile  (512, 64)   = 128 KiB
+  rows    (512, 1)    =   2 KiB
+  M2      (2,128,128) = 128 KiB
+  out     (512, 64)   = 128 KiB            total ~0.4 MiB << 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TILE_U = 512  # units per grid step; multiple of 8*2 (sublane x pairing)
+
+
+def _kernel(x_ref, rows_ref, m2_ref, o_ref, *, nq: int):
+    x = x_ref[...]                       # (T, 64) f32
+    t = x.shape[0]
+    x2 = x.reshape(t // 2, 128)          # pair units -> full MXU tile width
+    acc = jnp.zeros_like(x2)
+    for q in range(nq):                  # nq is tiny (distinct quant tables)
+        y2 = jax.lax.dot_general(
+            x2, m2_ref[q],
+            dimension_numbers=(((1,), (1,)), ((), ())),  # x2 @ M2[q].T
+            preferred_element_type=jnp.float32,
+        )
+        mask2 = (rows_ref[...] == q).reshape(t // 2, 2)
+        mask2 = jnp.repeat(mask2, 64, axis=1)            # per-unit -> per-lane
+        acc = jnp.where(mask2, y2, acc)
+    o_ref[...] = jnp.clip(jnp.round(acc + 128.0), 0.0, 255.0).reshape(t, 64)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_idct(
+    coeffs: jnp.ndarray,      # (U, 64) int32/float zig-zag coefficients
+    m_matrices: jnp.ndarray,  # (NQ, 64, 64) float32 folded operators
+    unit_mrow: jnp.ndarray,   # (U,) int32
+    interpret: bool = True,
+) -> jnp.ndarray:
+    u, _ = coeffs.shape
+    nq = m_matrices.shape[0]
+    # block-diagonalize each M for the unit-pairing trick
+    eye2 = jnp.eye(2, dtype=m_matrices.dtype)
+    m2 = jnp.einsum("ab,qij->qaibj", eye2, m_matrices).reshape(nq, 128, 128)
+
+    pad = (-u) % TILE_U
+    x = jnp.pad(coeffs.astype(jnp.float32), ((0, pad), (0, 0)))
+    rows = jnp.pad(unit_mrow.astype(jnp.int32), (0, pad))[:, None]
+
+    grid = (x.shape[0] // TILE_U,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nq=nq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_U, 64), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_U, 1), lambda i: (i, 0)),
+            pl.BlockSpec((nq, 128, 128), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_U, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 64), jnp.float32),
+        interpret=interpret,
+    )(x, rows, m2)
+    return out[:u]

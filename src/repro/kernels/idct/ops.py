@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the fused IDCT kernel (drop-in for
+repro.core.decode.idct_units_folded)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .idct import fused_idct
+from .ref import fused_idct_ref  # noqa: F401  (re-exported oracle)
+
+
+def idct_units(coeffs: jnp.ndarray, m_matrices: jnp.ndarray,
+               unit_mrow: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Fused dequant+dezigzag+IDCT; Pallas on TPU, interpret mode on CPU."""
+    return fused_idct(coeffs, m_matrices, unit_mrow, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused dequant + de-zigzag + IDCT kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_idct_ref(
+    coeffs: jnp.ndarray,      # (U, 64) zig-zag order quantized coefficients
+    m_matrices: jnp.ndarray,  # (NQ, 64, 64) folded operators (bitstream.folded_idct_matrix)
+    unit_mrow: jnp.ndarray,   # (U,) int32 matrix row per unit
+) -> jnp.ndarray:
+    """(U, 64) row-major pixel samples in [0, 255] (float32)."""
+    x = coeffs.astype(jnp.float32)
+    out = jnp.zeros_like(x)
+    for q in range(m_matrices.shape[0]):
+        y = x @ m_matrices[q].T
+        out = jnp.where((unit_mrow == q)[:, None], y, out)
+    return jnp.clip(jnp.round(out + 128.0), 0.0, 255.0)

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract memory / FLOP / collective statistics.
+
+Proves the distribution config is coherent for the production meshes
+(16x16 single pod; 2x16x16 two pods) without hardware: parameters,
+optimizer state and caches are ShapeDtypeStructs (never allocated),
+`.lower()` builds sharded HLO, `.compile()` runs full SPMD partitioning on
+the host backend, and memory_analysis()/cost_analysis() provide §Roofline
+inputs.
+
+Cost-extraction note: XLA cost_analysis counts a `while` body once, so the
+scanned-layer/grad-accum loops hide trip counts. Each cell therefore
+compiles (a) the REAL config (memory proof + compile proof), and (b) four
+small *unrolled* variants (periods P in {1,2}, batch b in {b0, 2b0},
+attention single-block) whose exact costs fit the affine model
+F(P,b) = alpha + beta*b + gamma*P + delta*P*b, which is then evaluated at
+the real (P, B). FLOPs/bytes/collectives are all affine in (P, b) by
+construction of the model family.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (
+    ARCH_IDS, SHAPES, cell_is_applicable, get_config, input_specs,
+    shape_overrides,
+)
+from ..dist import plan as DP
+from ..dist import sharding as S
+from ..dist.collectives import summarize
+from ..launch.mesh import TPU_V5E, make_production_mesh
+from ..models.config import ModelConfig
+from ..models.model import abstract_params, scan_unroll
+from ..serve.step import abstract_caches, make_decode_step, make_prefill_step
+from ..train.optimizer import AdamWConfig, abstract_opt_state
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    # giant configs: bf16 moments, no master copy (EXPERIMENTS.md §Dry-run)
+    giant = cfg.param_count() > 60e9
+    return AdamWConfig(moment_dtype="bfloat16" if giant else "float32",
+                       master_weights=False)
+
+
+def default_microbatches(arch: str, shape: str) -> int:
+    if shape != "train_4k":
+        return 1
+    return {
+        "deepseek-v3-671b": 8,
+        "deepseek-v2-236b": 8,
+        "command-r-plus-104b": 4,
+        "jamba-v0.1-52b": 4,
+    }.get(arch, 2)
+
+
+def lower_cell(
+    arch: str, shape: str, mesh, *,
+    n_periods: Optional[int] = None,
+    batch: Optional[int] = None,
+    microbatches: Optional[int] = None,
+    unrolled: bool = False,
+    rules_override: Optional[Dict] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one (possibly size-overridden) cell."""
+    cfg = shape_overrides(get_config(arch), shape)
+    seq, gbatch, kind = SHAPES[shape]
+    b = batch or gbatch
+    if n_periods is not None:
+        cfg = dataclasses.replace(cfg, n_periods=n_periods)
+    if unrolled:
+        # attention chunking must not hide flops inside collapsed loop
+        # bodies: single-block for full attention; window-sized blocks (the
+        # static skipping path, unrolled) for sliding-window archs.
+        ac = (2 * cfg.sliding_window if cfg.sliding_window > 0
+              else 2 * max(seq, cfg.enc_seq))
+        cfg = dataclasses.replace(cfg, attn_chunk=ac)
+    maxpos = seq + 8 if cfg.norm == "layernorm" else 0
+    model = abstract_params(cfg, max_positions=maxpos)
+    rules = DP.rules_for(cfg, mesh, kind, b)
+    if rules_override:
+        rules.update(rules_override)
+    prules = DP.param_rules(rules, cfg, mesh)
+    pshard = DP.param_shardings(model.specs, prules, mesh)
+    specs = input_specs(cfg, shape, batch_override=b)
+    unroll_ctx = scan_unroll(256 if unrolled else 1)
+
+    t0 = time.time()
+    with unroll_ctx:
+        if kind == "train":
+            mb = microbatches if microbatches is not None else \
+                default_microbatches(arch, shape)
+            opt_cfg = opt_config_for(cfg)
+            opt = abstract_opt_state(model.params, opt_cfg)
+            rep = NamedSharding(mesh, P())
+            oshard = type(opt)(
+                rep,
+                jax.tree.map(lambda _, s: s, opt.mu, pshard),
+                jax.tree.map(lambda _, s: s, opt.nu, pshard),
+                None if opt.master is None else jax.tree.map(
+                    lambda _, s: s, opt.master, pshard),
+                None if opt.error is None else jax.tree.map(
+                    lambda _, s: s, opt.error, pshard),
+            )
+            bshard = DP.batch_shardings(specs, rules, mesh)
+            from ..train.step import make_train_step
+            step = make_train_step(cfg, opt_cfg, microbatches=mb)
+
+            def run(params, opt_state, bt):
+                with S.logical_rules(rules):
+                    return step(params, opt_state, bt)
+
+            jitted = jax.jit(run, in_shardings=(pshard, oshard, bshard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(model.params, opt, specs)
+        elif kind == "prefill":
+            caches = abstract_caches(cfg, b, seq + 8)
+            cshard = DP.cache_shardings(cfg, rules, mesh)
+            bshard = DP.batch_shardings(specs, rules, mesh)
+            stepfn = make_prefill_step(cfg, seq + 8)
+
+            def run(params, bt, caches):
+                with S.logical_rules(rules):
+                    return stepfn(params, bt, caches)
+
+            jitted = jax.jit(run, in_shardings=(pshard, bshard, cshard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(model.params, specs, caches)
+        else:  # decode
+            caches = abstract_caches(cfg, b, seq)
+            if cfg.is_encdec:
+                caches = dict(caches, enc_out=jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16))
+            cshard = DP.cache_shardings(cfg, rules, mesh,
+                                        with_enc_out=cfg.is_encdec)
+            tshard = DP.batch_shardings(specs, rules, mesh)
+            stepfn = make_decode_step(cfg)
+
+            def run(params, token, caches):
+                with S.logical_rules(rules):
+                    return stepfn(params, token, seq - 1, caches)
+
+            jitted = jax.jit(run,
+                             in_shardings=(pshard, tshard["token"], cshard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(model.params, specs["token"], caches)
+
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll_total, coll_kinds = summarize(compiled.as_text())
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "n_chips": mesh.size,
+        "n_periods": cfg.n_periods, "batch": b,
+        "compile_s": round(compile_s, 1),
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll_total),
+        "collective_kinds": coll_kinds,
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "generated_code_bytes": int(
+            getattr(mem, "generated_code_size_in_bytes", 0)),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "microbatches": (microbatches if microbatches is not None
+                         else default_microbatches(arch, shape)),
+    }
+
+
+def _affine_fit(f11, f21, f12, f22, p_lo, p_hi, b_lo, b_hi):
+    """Solve F(P,b) = a + beta*b + gamma*P + delta*P*b from 4 samples."""
+    dp = p_hi - p_lo
+    db = b_hi - b_lo
+    delta = (f22 - f21 - f12 + f11) / (dp * db)
+    gamma = (f21 - f11) / dp - delta * b_lo
+    beta = (f12 - f11) / db - delta * p_lo
+    alpha = f11 - beta * b_lo - gamma * p_lo - delta * p_lo * b_lo
+    return lambda P, B: alpha + beta * B + gamma * P + delta * P * B
+
+
+def cell_stats(arch: str, shape: str, mesh, variant_mesh,
+               microbatches: Optional[int] = None) -> Dict[str, Any]:
+    """Real compile + cost extrapolation from unrolled small-P variants.
+
+    Variants lower at the REAL global batch (compile time depends on op
+    count, not shapes), so only the period dimension needs extrapolating:
+    F(P) is affine in P (layers are additive); P=1 lowers anomalously
+    (trip-1 while simplification) so {2,3} anchor the fit — validated to
+    <1% residual at P=8 (EXPERIMENTS.md §Dry-run).
+    """
+    real = lower_cell(arch, shape, mesh, microbatches=microbatches)
+    seq, gbatch, kind = SHAPES[shape]
+    cfg = get_config(arch)
+    p_real = cfg.n_periods
+
+    p_lo, p_hi = 2, 3
+    samples = {
+        pp: lower_cell(arch, shape, variant_mesh, n_periods=pp, batch=gbatch,
+                       microbatches=1, unrolled=True)
+        for pp in (p_lo, p_hi)
+    }
+    # grad accumulation repeats the per-microbatch program over B/mb-sized
+    # slices: per-layer/token costs are unchanged; optimizer+param-collective
+    # terms repeat mb times. The variants (mb=1) therefore UPPER-bound the
+    # per-step flops slightly low for mb>1; the optimizer share is O(1e-3)
+    # of step flops for every cell here (noted in EXPERIMENTS.md).
+    for field in ("flops", "hbm_bytes_accessed", "collective_bytes"):
+        slope = samples[p_hi][field] - samples[p_lo][field]
+        real[f"{field}_model"] = max(
+            0.0, samples[p_lo][field] + (p_real - p_lo) * slope)
+    real["variant_compile_s"] = sum(s["compile_s"] for s in samples.values())
+    return real
+
+
+def analytic_score_bytes(arch: str, shape: str, n_chips: int) -> float:
+    """Per-chip HBM bytes of materialized S^2 attention scores in the
+    single-block cost-extraction variants.
+
+    The production attention is flash-style (scores stay in VMEM); the
+    cost variants use a single block so their *bytes* include the full
+    score matrix traffic. This returns that artifact so the memory
+    roofline term can deduct it (FLOPs are unaffected). Passes: fwd writes
+    + reads the f32 scores and the softmax'd weights (~4 array passes);
+    train adds dS + remat recompute (~8 more)."""
+    cfg = get_config(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    if kind == "decode":
+        return 0.0
+    n_attn = sum(1 for m, _ in cfg.layer_specs
+                 if m in ("attn", "mla", "attn_bidir", "attn_cross"))
+    # XLA fuses the softmax chain: the f32 scores cross HBM ~once each way
+    # in fwd; bwd adds dS + one remat recompute (~2 passes each way).
+    passes = 2 if kind == "prefill" else 6
+    elems = float(gbatch) * seq * seq * cfg.n_heads
+    return passes * n_attn * elems * 4.0 / n_chips
+
+
+def roofline(stats: Dict[str, Any]) -> Dict[str, float]:
+    """Three roofline terms in seconds (per §Roofline).
+
+    cost_analysis()/HLO text report *per-chip* (post-SPMD-partitioning)
+    quantities, so each term divides by single-chip peak rates — this equals
+    the prompt's global_quantity / (chips x rate) formulation. The memory
+    term deducts the score-matrix artifact of the single-block variants
+    (see analytic_score_bytes)."""
+    hw = TPU_V5E
+    corr = analytic_score_bytes(stats["arch"], stats["shape"],
+                                stats["n_chips"])
+    bytes_eff = max(stats["hbm_bytes_accessed_model"] - corr,
+                    0.2 * stats["hbm_bytes_accessed_model"])
+    compute_s = stats["flops_model"] / hw["peak_flops_bf16"]
+    memory_s = bytes_eff / hw["hbm_bw"]
+    coll_s = stats["collective_bytes_model"] / hw["ici_bw"]
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dom[0], "bound_s": dom[1],
+            "score_bytes_deducted": corr}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    seq, gbatch, kind = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * seq * gbatch
+    if kind == "prefill":
+        return 2.0 * n_active * seq * gbatch
+    return 2.0 * n_active * 1 * gbatch  # one token per request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-variants", action="store_true",
+                    help="skip cost-extraction variants (compile proof only)")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    single = make_production_mesh(multi_pod=False)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod256", single))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods512", make_production_mesh(multi_pod=True)))
+
+    # cheap shapes first so partial sweeps maximize table coverage
+    shape_order = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+    cells = ([(a, s) for s in shape_order for a in ARCH_IDS]
+             if args.all else [(args.arch, args.shape)])
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    done = set()
+    out_path = os.path.join(args.out, "dryrun.json")
+    if args.resume and os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+        done = {(r.get("arch"), r.get("shape"), r.get("mesh"))
+                for r in results if "error" not in r}
+        done |= {(r.get("arch"), r.get("shape"), None)
+                 for r in results if "skipped" in r}
+        print(f"resuming: {len(done)} cells already recorded")
+    for arch, shape in cells:
+        ok, reason = cell_is_applicable(arch, shape)
+        if not ok:
+            if (arch, shape, None) not in done:
+                print(f"SKIP {arch} {shape}: {reason}", flush=True)
+                results.append({"arch": arch, "shape": shape,
+                                "skipped": reason})
+            continue
+        for mesh_name, mesh in meshes:
+            tag = f"{arch}|{shape}|{mesh_name}"
+            mesh_tag = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+            if (arch, shape, mesh_tag) in done:
+                continue
+            try:
+                if args.no_variants or mesh_name == "pods512":
+                    st = lower_cell(arch, shape, mesh,
+                                    microbatches=args.microbatches)
+                else:
+                    st = cell_stats(arch, shape, mesh, single,
+                                    microbatches=args.microbatches)
+                    st["roofline"] = roofline(st)
+                    st["model_flops"] = model_flops(arch, shape)
+                    st["useful_flop_frac"] = (
+                        st["model_flops"] / (st["flops_model"] * mesh.size)
+                        if st.get("flops_model") else 0.0)
+                results.append(st)
+                r = st.get("roofline")
+                extra = (f"dom={r['dominant']} bound={r['bound_s']*1e3:.2f}ms "
+                         if r else "")
+                print(f"OK   {tag}: compile={st['compile_s']}s {extra}"
+                      f"temp/chip={st['temp_bytes']/mesh.size/2**30:.2f}GiB",
+                      flush=True)
+            except Exception as e:
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": mesh_name, "error": str(e)[:500]})
+        with open(os.path.join(args.out, "dryrun.json"), "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if "flops" in r)
+    n_fail = sum(1 for r in results if "error" in r)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    print(f"\n=== dry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped ===")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}PiB"
+
+
+def fmt_s(s):
+    if s is None:
+        return "-"
+    if s < 1e-3:
+        return f"{s*1e6:.1f}us"
+    if s < 1.0:
+        return f"{s*1e3:.2f}ms"
+    return f"{s:.2f}s"
+
+
+def render(path: str) -> str:
+    rows = json.load(open(path))
+    out = []
+    out.append("### Dry-run compile matrix\n")
+    out.append("| arch | shape | mesh | compile | temp/chip | args/chip | flops/chip (model) | coll bytes/chip |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | - | SKIP: {r['skipped']} | | | | |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh')} | FAIL | | | | |")
+            continue
+        n = r["n_chips"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']}s "
+            f"| {fmt_bytes(r['temp_bytes']/n)} | {fmt_bytes(r['argument_bytes']/n)} "
+            f"| {r.get('flops_model', 0):.3e} "
+            f"| {fmt_bytes(r.get('collective_bytes_model', r.get('collective_bytes', 0)))} |")
+
+    out.append("\n### Roofline (single-pod 16x16, per step)\n")
+    out.append("| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS/HLO | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    from .dryrun import model_flops, roofline
+    for r in rows:
+        if "flops_model" not in r or r.get("mesh") != "16x16":
+            continue
+        rf = roofline(r)  # recompute with the current (corrected) formula
+        mf = model_flops(r["arch"], r["shape"])
+        frac = mf / (r["flops_model"] * r["n_chips"]) if r["flops_model"] else 0
+        # fraction of roofline achieved = ideal compute time over bound
+        from .mesh import TPU_V5E
+        ideal = mf / (r["n_chips"] * TPU_V5E["peak_flops_bf16"])
+        achieved = ideal / rf["bound_s"] if rf["bound_s"] else 0.0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} "
+            f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
+            f"| **{rf['dominant']}** | {frac:.2f} | {achieved:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else
+                 "results/dryrun/dryrun.json"))

@@ -1,0 +1,367 @@
+"""Attention mixers: GQA/MHA (chunked flash-style) and DeepSeek MLA.
+
+Design notes (TPU):
+  * Training/prefill attention is a double-chunked online-softmax scan
+    (queries outer, keys inner) so the S^2 score matrix never materializes —
+    memory O(q_chunk x kv_chunk) per step, which is what makes the 4k/32k
+    cells fit the dry-run memory budget.
+  * Decode uses the KV cache directly (one query position). MLA decode runs
+    in the *absorbed* latent form: the cache holds (c_kv, k_rope) = 576
+    floats/token regardless of head count — the MLA selling point.
+  * Optional int8 KV cache (per-position-head scales) halves cache bytes;
+    long-context cells optionally shard the cache length over the model
+    axis ("kv_seq" logical axis = sequence-parallel decode).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .layers import ParamBuilder, apply_rope
+from .unroll import unroll_n
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask, softcap):
+    """q (B,Sq,H,D) k/v (B,Sk,Hkv,D'); returns (o, m, l) partials in f32."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                       # (b,q,hkv,g)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, -1), m.reshape(b, sq, h), l.reshape(b, sq, h)
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Sk, Hkv, D)
+    v: jnp.ndarray,            # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    sliding_window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    q = q * scale
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # pad to chunk multiples
+    pq = (-sq) % q_chunk
+    pk = (-sk) % kv_chunk
+    q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(b, nk, kv_chunk, k.shape[2], d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_chunk, v.shape[2], v.shape[-1]).transpose(1, 0, 2, 3, 4)
+
+    q_pos0 = jnp.arange(q.shape[1]) + q_offset
+    k_pos0 = jnp.arange(k.shape[1])
+    kv_valid = k_pos0 < sk
+
+    # Sliding-window block skipping (§Perf iteration 3): with a causal
+    # window only ceil(window/kv_chunk)+1 KV blocks can be unmasked for any
+    # query block — slice exactly those instead of scanning all nk. This is
+    # a *static* bound, so the scan length shrinks at trace time:
+    # attention work drops from O(S^2) to O(S*window).
+    windowed = causal and 0 < sliding_window and q_offset == 0
+    w_chunks = min(nk, (sliding_window + kv_chunk - 1) // kv_chunk + 1) \
+        if windowed else nk
+
+    def per_qchunk(qi, qc):
+        q_pos = jax.lax.dynamic_slice_in_dim(q_pos0, qi * q_chunk, q_chunk)
+        if windowed:
+            q_hi_chunk = ((qi + 1) * q_chunk - 1) // kv_chunk
+            k0 = jnp.clip(q_hi_chunk - w_chunks + 1, 0, nk - w_chunks)
+            ks_l = jax.lax.dynamic_slice_in_dim(ks, k0, w_chunks, axis=0)
+            vs_l = jax.lax.dynamic_slice_in_dim(vs, k0, w_chunks, axis=0)
+            kidx = k0 + jnp.arange(w_chunks)
+        else:
+            ks_l, vs_l, kidx = ks, vs, jnp.arange(nk)
+
+        def per_kchunk(carry, inp):
+            o, m, l = carry
+            ki, kc, vc = inp
+            k_pos = jax.lax.dynamic_slice_in_dim(k_pos0, ki * kv_chunk, kv_chunk)
+            valid = jax.lax.dynamic_slice_in_dim(kv_valid, ki * kv_chunk, kv_chunk)
+            mask = jnp.broadcast_to(valid[None, None, :], (b, q_chunk, kv_chunk))
+            if causal:
+                cm = q_pos[:, None] >= k_pos[None, :]
+                mask = mask & cm[None]
+            if sliding_window > 0:
+                wm = (q_pos[:, None] - k_pos[None, :]) < sliding_window
+                mask = mask & wm[None]
+            ob, mb, lb = _attend_block(qc, kc, vc, mask, softcap)
+            m_new = jnp.maximum(m, mb)
+            c1 = jnp.exp(m - m_new)[..., None]
+            c2 = jnp.exp(mb - m_new)[..., None]
+            o = o * c1 + ob * c2
+            l = l * c1[..., 0] + lb * c2[..., 0]
+            return (o, m_new, l), None
+
+        o0 = jnp.zeros((b, q_chunk, h, v.shape[-1]), jnp.float32)
+        m0 = jnp.full((b, q_chunk, h), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, h), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            per_kchunk, (o0, m0, l0), (kidx, ks_l, vs_l),
+            unroll=min(unroll_n(), w_chunks),
+        )
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    if unroll_n() > 1 and nq <= 64:
+        out = jnp.stack([per_qchunk(i, qs[i]) for i in range(nq)])
+    else:
+        out = jax.lax.map(lambda args: per_qchunk(*args), (jnp.arange(nq), qs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, q.shape[1], h, v.shape[-1])
+    return out[:, :sq].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (GQA) with optional int8 quantization
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, Smax, Hkv, D) in cache dtype
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]  # (B, Smax, Hkv, 1) when int8
+    v_scale: Optional[jnp.ndarray]
+    length: jnp.ndarray     # () int32 current fill
+
+
+def _quantize(x):
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def _dequantize(q, s):
+    return q.astype(jnp.float32) * s.astype(jnp.float32)
+
+
+def init_kv_cache(batch, max_len, hkv, d, dtype="bfloat16") -> KVCache:
+    if dtype == "int8":
+        z = jnp.zeros((batch, max_len, hkv, d), jnp.int8)
+        s = jnp.zeros((batch, max_len, hkv, 1), jnp.bfloat16)
+        return KVCache(z, z, s, s, jnp.zeros((), jnp.int32))
+    z = jnp.zeros((batch, max_len, hkv, d), jnp.bfloat16)
+    return KVCache(z, z, None, None, jnp.zeros((), jnp.int32))
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos) -> KVCache:
+    """Insert (B, S_new, Hkv, D) at position `pos` (static or traced)."""
+    if cache.k_scale is not None:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        return KVCache(
+            jax.lax.dynamic_update_slice_in_dim(cache.k, kq, pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cache.v, vq, pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, pos, axis=1),
+            cache.length + k_new.shape[1],
+        )
+    return KVCache(
+        jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), pos, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), pos, axis=1),
+        None, None, cache.length + k_new.shape[1],
+    )
+
+
+def cache_kv(cache: KVCache):
+    if cache.k_scale is not None:
+        return (_dequantize(cache.k, cache.k_scale),
+                _dequantize(cache.v, cache.v_scale))
+    return cache.k, cache.v
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def make_gqa(b: ParamBuilder, cfg: ModelConfig, name: str):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b.add(f"{name}.wq", (d, h, dh), ("embed", "heads", None))
+    b.add(f"{name}.wk", (d, hkv, dh), ("embed", "kv_heads", None))
+    b.add(f"{name}.wv", (d, hkv, dh), ("embed", "kv_heads", None))
+    b.add(f"{name}.wo", (h, dh, d), ("heads", None, "embed"))
+
+
+def gqa_forward(
+    params: Dict, cfg: ModelConfig, name: str, x: jnp.ndarray,
+    positions: jnp.ndarray, *, causal: bool = True,
+    cache: Optional[KVCache] = None, cache_pos=None,
+    kv_x: Optional[jnp.ndarray] = None, use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """x (B,S,d). With a cache: updates at cache_pos and attends over it.
+    kv_x (encoder states) switches to cross-attention (no cache, no causal).
+    """
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params[f"{name}.wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params[f"{name}.wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params[f"{name}.wv"])
+    q = shard(q, "batch", "seq", "heads", None)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if kv_x is None else (
+            jnp.arange(kv_src.shape[1])[None, :] * jnp.ones(
+                (kv_src.shape[0], 1), jnp.int32))
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = cache_update(cache, k, v, cache_pos)
+        k, v = cache_kv(new_cache)
+        k = shard(k, "batch", "kv_seq", "kv_heads", None)
+        v = shard(v, "batch", "kv_seq", "kv_heads", None)
+        sk = k.shape[1]
+        kpos = jnp.arange(sk)
+        qpos = positions  # (B, Sq) absolute
+        mask = kpos[None, None, :] <= qpos[:, :, None]
+        if cfg.sliding_window > 0:
+            mask &= (qpos[:, :, None] - kpos[None, None, :]) < cfg.sliding_window
+        o = _cached_attention(q, k, v, mask, cfg.attn_logit_softcap)
+    else:
+        o = chunked_attention(
+            q, k, v, causal=causal and kv_x is None,
+            sliding_window=cfg.sliding_window,
+            softcap=cfg.attn_logit_softcap, q_chunk=cfg.attn_chunk // 2,
+            kv_chunk=cfg.attn_chunk,
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), params[f"{name}.wo"])
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def _cached_attention(q, k, v, mask, softcap):
+    scale = q.shape[-1] ** -0.5
+    ob, mb, lb = _attend_block(q * scale, k, v, mask, softcap)
+    return (ob / jnp.maximum(lb[..., None], 1e-30)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray       # (B, Smax, kv_lora)
+    k_rope: jnp.ndarray     # (B, Smax, rope_dim)
+    length: jnp.ndarray
+
+
+def init_mla_cache(batch, max_len, cfg: ModelConfig, dtype="bfloat16") -> MLACache:
+    m = cfg.mla
+    dt = jnp.int8 if dtype == "int8" else jnp.bfloat16
+    # int8 latent cache stores an extra scale channel folded into bf16 path;
+    # for simplicity the quantized variant keeps scales per position.
+    if dtype == "int8":
+        raise NotImplementedError("int8 MLA cache: use kv_seq sharding instead")
+    return MLACache(
+        jnp.zeros((batch, max_len, m.kv_lora), dt),
+        jnp.zeros((batch, max_len, m.rope_dim), dt),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def make_mla(b: ParamBuilder, cfg: ModelConfig, name: str):
+    d, h, m = cfg.d_model, cfg.n_heads, cfg.mla
+    b.add(f"{name}.w_dq", (d, m.q_lora), ("embed", None))
+    b.add(f"{name}.q_norm", (m.q_lora,), (None,), init="zeros")
+    b.add(f"{name}.w_uq", (m.q_lora, h, m.nope_dim + m.rope_dim),
+          (None, "heads", None))
+    b.add(f"{name}.w_dkv", (d, m.kv_lora), ("embed", None))
+    b.add(f"{name}.kv_norm", (m.kv_lora,), (None,), init="zeros")
+    b.add(f"{name}.w_kr", (d, m.rope_dim), ("embed", None))
+    b.add(f"{name}.w_uk", (m.kv_lora, h, m.nope_dim), (None, "heads", None))
+    b.add(f"{name}.w_uv", (m.kv_lora, h, m.v_dim), (None, "heads", None))
+    b.add(f"{name}.wo", (h, m.v_dim, d), ("heads", None, "embed"))
+
+
+def mla_forward(
+    params: Dict, cfg: ModelConfig, name: str, x: jnp.ndarray,
+    positions: jnp.ndarray, *, cache: Optional[MLACache] = None,
+    cache_pos=None, absorbed: bool = False,
+) -> Tuple[jnp.ndarray, Optional[MLACache]]:
+    from .layers import rmsnorm
+
+    m = cfg.mla
+    bsz, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(jnp.einsum("bsd,dq->bsq", x, params[f"{name}.w_dq"]),
+                 params[f"{name}.q_norm"])
+    q = jnp.einsum("bsq,qhk->bshk", cq, params[f"{name}.w_uq"])
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(jnp.einsum("bsd,dc->bsc", x, params[f"{name}.w_dkv"]),
+                  params[f"{name}.kv_norm"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params[f"{name}.w_kr"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+
+    if cache is not None:
+        new_cache = MLACache(
+            jax.lax.dynamic_update_slice_in_dim(
+                cache.c_kv, ckv.astype(cache.c_kv.dtype), cache_pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(
+                cache.k_rope, k_rope.astype(cache.k_rope.dtype), cache_pos,
+                axis=1),
+            cache.length + s,
+        )
+        ckv_all = shard(new_cache.c_kv, "batch", "kv_seq", None)
+        kr_all = shard(new_cache.k_rope, "batch", "kv_seq", None)
+        # absorbed scores: q_lat = W_uk^T q_nope  (B,S,H,kv_lora)
+        q_lat = jnp.einsum("bshk,chk->bshc", q_nope, params[f"{name}.w_uk"])
+        logits = (
+            jnp.einsum("bshc,btc->bsht", q_lat.astype(jnp.float32),
+                       ckv_all.astype(jnp.float32))
+            + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                         kr_all.astype(jnp.float32))
+        ) * scale
+        kpos = jnp.arange(ckv_all.shape[1])
+        mask = kpos[None, None, None, :] <= positions[:, :, None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bsht,btc->bshc", w, ckv_all.astype(jnp.float32))
+        o = jnp.einsum("bshc,chk->bshk", o_lat.astype(x.dtype),
+                       params[f"{name}.w_uv"])
+    else:
+        k_nope = jnp.einsum("bsc,chk->bshk", ckv, params[f"{name}.w_uk"])
+        v = jnp.einsum("bsc,chk->bshk", ckv, params[f"{name}.w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (bsz, s, h, m.rope_dim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = chunked_attention(
+            qq, k, v, causal=True, q_chunk=cfg.attn_chunk // 2,
+            kv_chunk=cfg.attn_chunk, scale=scale,
+        )
+        new_cache = None
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), params[f"{name}.wo"])
+    return shard(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,129 @@
+"""FFN layers: gated dense variants and sort-based capacity MoE (EP-shardable).
+
+MoE dispatch is the sort+capacity formulation: tokens' (expert, rank) slots
+are computed with one argsort — no (T, E, C) one-hot tensors — and the
+(E, C, d) expert buffers are sharded over the expert-parallel axis, so XLA
+emits all-to-alls for dispatch/combine. Capacity overflow drops tokens
+(standard GShard-style), counted in aux stats.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from .config import ModelConfig, MoEConfig
+from .layers import ParamBuilder, activation_fn
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def make_dense_ffn(b: ParamBuilder, cfg: ModelConfig, name: str,
+                   d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        b.add(f"{name}.w_gate", (d, ff), ("embed", "mlp"))
+        b.add(f"{name}.w_up", (d, ff), ("embed", "mlp"))
+    else:
+        b.add(f"{name}.w_up", (d, ff), ("embed", "mlp"))
+    b.add(f"{name}.w_down", (ff, d), ("mlp", "embed"))
+
+
+def dense_ffn(params: Dict, cfg: ModelConfig, name: str, x: jnp.ndarray):
+    if cfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(x @ params[f"{name}.w_gate"]) * (x @ params[f"{name}.w_up"])
+    else:
+        h = activation_fn(cfg.activation)(x @ params[f"{name}.w_up"])
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ params[f"{name}.w_down"], "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def make_moe_ffn(b: ParamBuilder, cfg: ModelConfig, name: str):
+    d = cfg.d_model
+    m = cfg.moe
+    e, f = m.n_experts, m.expert_ff
+    b.add(f"{name}.router", (d, e), ("embed", None), scale=0.02)
+    if m.router == "sigmoid_bias":
+        b.add(f"{name}.router_bias", (e,), (None,), init="zeros")
+    b.add(f"{name}.w_gate", (e, d, f), ("experts", "embed", "mlp"))
+    b.add(f"{name}.w_up", (e, d, f), ("experts", "embed", "mlp"))
+    b.add(f"{name}.w_down", (e, f, d), ("experts", "mlp", "embed"))
+    if m.n_shared:
+        sf = (m.shared_ff or m.expert_ff) * m.n_shared
+        make_dense_ffn(b, cfg, f"{name}.shared", d_ff=sf)
+
+
+def moe_ffn(params: Dict, cfg: ModelConfig, name: str,
+            x: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """x (B, S, d) -> (B, S, d), aux stats."""
+    m = cfg.moe
+    bsz, s, d = x.shape
+    t = bsz * s
+    xt = x.reshape(t, d)
+    e, k = m.n_experts, m.top_k
+
+    logits = (xt @ params[f"{name}.router"]).astype(jnp.float32)
+    if m.router == "sigmoid_bias":
+        # DeepSeek-V3 aux-free: sigmoid affinity + learned per-expert bias for
+        # selection only; combine weights use the unbiased affinities.
+        aff = jax.nn.sigmoid(logits)
+        sel = aff + params[f"{name}.router_bias"].astype(jnp.float32)[None]
+        _, idx = jax.lax.top_k(sel, k)
+        w = jnp.take_along_axis(aff, idx, axis=1)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(m.capacity_factor * t * k / e))
+    cap = -(-cap // 32) * 32  # multiple of 32: shardable over the DP axes
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(t * k) - starts[sorted_e]
+    keep = rank < cap
+    src_tok = order // k
+
+    # dispatch: (E, C, d) expert buffers, sharded over the EP axis
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    slot_e = jnp.where(keep, sorted_e, e)                      # drop -> OOB
+    buf = buf.at[slot_e, jnp.where(keep, rank, 0)].set(
+        xt[src_tok], mode="drop")
+    buf = shard(buf, "experts", None, "embed")
+
+    act = jax.nn.silu if cfg.activation in ("swiglu",) else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params[f"{name}.w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, params[f"{name}.w_up"])
+    h = shard(h, "experts", None, "mlp")
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params[f"{name}.w_down"])
+    y_buf = shard(y_buf, "experts", None, "embed")
+
+    # combine: gather back + weight + scatter-add per token
+    y_sorted = y_buf[slot_e, jnp.where(keep, rank, 0)]
+    gate = w.reshape(-1)[order]
+    y_sorted = jnp.where(keep[:, None], y_sorted * gate[:, None].astype(
+        y_sorted.dtype), 0)
+    out = jnp.zeros((t, d), x.dtype).at[src_tok].add(y_sorted)
+
+    if m.n_shared:
+        out = out + dense_ffn(params, cfg, f"{name}.shared",
+                              xt[None])[0]
+
+    aux = {
+        "dropped_frac": 1.0 - keep.mean(),
+        "router_entropy": -(jax.nn.softmax(logits, -1)
+                            * jax.nn.log_softmax(logits, -1)).sum(-1).mean(),
+    }
+    return shard(out.reshape(bsz, s, d), "batch", "seq", "embed"), aux

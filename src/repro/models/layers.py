@@ -1,0 +1,123 @@
+"""Shared layers: norms, rotary embeddings, activations, param building."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Param construction: params + matching logical-spec tree
+# ---------------------------------------------------------------------------
+
+class ParamBuilder:
+    """Builds a param pytree and a parallel tree of logical axis names.
+
+    abstract=True stores jax.ShapeDtypeStruct leaves instead of arrays —
+    this is how the multi-pod dry-run builds 671B-parameter models without
+    allocating anything.
+    """
+
+    def __init__(self, rng: Optional[jax.Array], dtype=jnp.bfloat16,
+                 abstract: bool = False):
+        self.rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def _next(self) -> Optional[jax.Array]:
+        if self.abstract:
+            return None
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    def add(self, name: str, shape: Sequence[int],
+            logical: Sequence[Optional[str]], scale: Optional[float] = None,
+            init: str = "normal") -> None:
+        assert len(shape) == len(logical), (name, shape, logical)
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        elif init == "zeros":
+            self.params[name] = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            self.params[name] = jnp.ones(shape, self.dtype)
+        else:
+            if scale is None:
+                fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+                scale = 1.0 / np.sqrt(max(1, fan_in))
+            self.params[name] = (
+                jax.random.normal(self._next(), shape, jnp.float32) * scale
+            ).astype(self.dtype)
+        self.specs[name] = tuple(logical)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def make_norm(b: ParamBuilder, name: str, d: int, kind: str):
+    if kind == "rmsnorm":
+        b.add(f"{name}.w", (d,), (None,), init="zeros")
+    else:
+        b.add(f"{name}.w", (d,), (None,), init="ones")
+        b.add(f"{name}.b", (d,), (None,), init="zeros")
+
+
+def apply_norm(params: Dict, name: str, x: jnp.ndarray, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params[f"{name}.w"])
+    return layernorm(x, params[f"{name}.w"], params[f"{name}.b"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, Dh) with positions (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]

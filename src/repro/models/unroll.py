@@ -1,0 +1,22 @@
+"""Scan-unroll context shared by the layer stack and attention chunk loops.
+
+The dry-run's cost-extraction variants unroll every scan so XLA
+cost_analysis (which counts a `while` body once) sees the true op counts.
+"""
+import contextlib
+from typing import List
+
+_STACK: List[int] = [1]
+
+
+@contextlib.contextmanager
+def scan_unroll(n: int):
+    _STACK.append(n)
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def unroll_n() -> int:
+    return _STACK[-1]

@@ -1,0 +1,51 @@
+"""Serving step builders: prefill / decode with batched requests.
+
+`decode_*` / `long_*` dry-run cells lower exactly these functions: one new
+token against a seq_len KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import forward_decode, forward_prefill, init_caches
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch: Dict, caches):
+        return forward_prefill(params, cfg, batch, caches)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, token, pos, caches):
+        logits, caches = forward_decode(params, cfg, token, pos, caches)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
+            jnp.int32)
+        return next_token, logits, caches
+
+    return decode_step
+
+
+def make_sampling_decode_step(cfg: ModelConfig, temperature: float = 0.8,
+                              top_k: int = 50) -> Callable:
+    def decode_step(params, token, pos, caches, rng):
+        logits, caches = forward_decode(params, cfg, token, pos, caches)
+        l = logits[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
+        if top_k > 0:
+            kth = jax.lax.top_k(l, top_k)[0][:, -1:]
+            l = jnp.where(l < kth, -1e30, l)
+        nxt = jax.random.categorical(rng, l)[:, None].astype(jnp.int32)
+        return nxt, caches
+
+    return decode_step
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Shape-only cache pytree for dry-run lowering."""
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))

@@ -1,0 +1,123 @@
+"""In-house AdamW with ZeRO-style sharded moments, configurable moment
+dtypes (bf16 moments fit the 671B config in 16 GB/chip — math in
+EXPERIMENTS.md §Dry-run), global-norm clipping, and optional int8
+error-feedback gradient compression for cross-pod reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"      # "bfloat16" for the giant configs
+    master_weights: bool = False       # fp32 master copy of bf16 params
+    compress_grads: bool = False       # int8 error-feedback compression
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Optional[Any]
+    error: Optional[Any]    # error-feedback residual (compression)
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.master_weights else None)
+    error = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+             if cfg.compress_grads else None)
+    return OptState(jnp.zeros((), jnp.int32), mu, nu, master, error)
+
+
+def abstract_opt_state(params, cfg: AdamWConfig) -> OptState:
+    """Shape-only optimizer state (dry-run memory accounting)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+    return OptState(
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.tree.map(lambda p: sds(p, mdt), params),
+        jax.tree.map(lambda p: sds(p, mdt), params),
+        jax.tree.map(lambda p: sds(p, jnp.float32), params)
+        if cfg.master_weights else None,
+        jax.tree.map(lambda p: sds(p, jnp.bfloat16), params)
+        if cfg.compress_grads else None,
+    )
+
+
+def _compress_int8(g, err):
+    """Error-feedback int8 compression applied before the cross-pod
+    all-reduce: the quantization residual is carried to the next step."""
+    g = g.astype(jnp.float32) + err.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    deq = q * scale
+    return deq.astype(jnp.bfloat16), (g - deq).astype(jnp.bfloat16)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    params, grads, state: OptState, cfg: AdamWConfig, lr_scale: jnp.ndarray
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    new_error = state.error
+    if cfg.compress_grads:
+        pairs = jax.tree.map(_compress_int8, grads, state.error)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_error = jax.tree.map(lambda p: p[1], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / bc1
+        vh = v32 / bc2
+        base = master if master is not None else p
+        w = base.astype(jnp.float32)
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return w, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+    if cfg.master_weights:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu, state.master)
+    else:
+        out = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                           params, grads, state.mu, state.nu)
+    istuple = lambda x: isinstance(x, tuple) and len(x) == 3
+    w = jax.tree.map(lambda o: o[0], out, is_leaf=istuple)
+    mu = jax.tree.map(lambda o: o[1], out, is_leaf=istuple)
+    nu = jax.tree.map(lambda o: o[2], out, is_leaf=istuple)
+    new_master = w if cfg.master_weights else None
+    new_params = jax.tree.map(lambda p, wi: wi.astype(p.dtype), params, w)
+    return new_params, OptState(step, mu, nu, new_master, new_error), {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,25 @@
+"""LR schedules (warmup + cosine, constant, rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 200, total: int = 10_000,
+                  min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def rsqrt(step, *, warmup: int = 200):
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    return jnp.minimum(s / warmup, jnp.sqrt(warmup / s))
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "rsqrt": rsqrt, "constant": constant}

@@ -1,0 +1,157 @@
+"""Train/eval step builders: grad accumulation (microbatching), remat,
+mixed precision, and an optional GPipe-style pipeline schedule over a
+"stage" mesh axis.
+
+The returned step functions are pure (params, opt_state, batch, step) ->
+(params, opt_state, metrics) and are meant to be jit-compiled under a mesh
+with in/out shardings from dist.sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import forward_train
+from .optimizer import AdamWConfig, OptState, adamw_update
+from .schedule import SCHEDULES
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    schedule: str = "cosine",
+    microbatches: int = 1,
+    schedule_kwargs: Optional[Dict] = None,
+) -> Callable:
+    """Build the jittable train step (loss fwd/bwd + AdamW update).
+
+    microbatches > 1 accumulates gradients over leading-batch splits
+    (sequentially via lax.scan) — the standard activation-memory lever for
+    the giant configs; the collective schedule is unchanged because the
+    accumulation is local.
+    """
+    sched_kwargs = schedule_kwargs or {}
+    sched = SCHEDULES[schedule]
+
+    def loss_fn(params, batch):
+        loss, metrics = forward_train(params, cfg, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch: Dict):
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gsum, lsum = carry
+                (l, m), g = grad_fn(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"loss": loss}
+
+        lr_scale = sched(opt_state.step, **sched_kwargs)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = forward_train(params, cfg, batch)
+        return metrics
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Pipeline parallelism (GPipe-style) over a stage axis
+# ---------------------------------------------------------------------------
+
+def make_pipelined_forward(cfg: ModelConfig, n_stages: int,
+                           stage_axis: str = "stage"):
+    """Split the periodic pattern across `n_stages` pipeline stages and run
+    microbatches through a collective-permute ring (GPipe fill/drain).
+
+    Used inside shard_map over the stage axis; exercised by the PP dry-run
+    variant and tests/test_distribution.py. Requires n_periods % n_stages == 0.
+    """
+    assert cfg.n_periods % n_stages == 0
+    periods_per_stage = cfg.n_periods // n_stages
+
+    from ..models.model import _run_stack, _embed_inputs, _logits
+    from ..models.config import ModelConfig as _MC
+    import dataclasses as _dc
+
+    stage_cfg = _dc.replace(cfg, n_periods=periods_per_stage, prefix_layers=())
+
+    def stage_forward(stage_params, x, positions):
+        out, _, _ = _run_stack(stage_params, stage_cfg, x, positions)
+        return out
+
+    def pipeline(params_stacked, batch, n_microbatches: int):
+        """params_stacked: this stage's param shard (periods_per_stage).
+        Runs inside shard_map: axis index = stage id."""
+        idx = jax.lax.axis_index(stage_axis)
+        x = _embed_inputs(params_stacked, cfg, batch)  # stage 0 semantics
+        b, s, d = x.shape
+        assert b % n_microbatches == 0
+        mb = x.reshape(n_microbatches, b // n_microbatches, s, d)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b // n_microbatches, s))
+
+        n_ticks = n_microbatches + n_stages - 1
+        buf = jnp.zeros_like(mb[0])
+        outs = jnp.zeros_like(mb)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if in range); others use ring input
+            inject = jnp.where(t < n_microbatches, t, 0)
+            x_in = jnp.where(idx == 0, mb[inject], buf)
+            y = stage_forward({"pattern": params_stacked["pattern"]},
+                              x_in, positions)
+            # pass to next stage
+            buf = jax.lax.ppermute(
+                y, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # last stage stores result for microbatch t - (n_stages - 1)
+            out_slot = jnp.clip(t - (n_stages - 1), 0, n_microbatches - 1)
+            store = (idx == n_stages - 1) & (t >= n_stages - 1)
+            outs = jax.lax.cond(
+                store,
+                lambda o: o.at[out_slot].set(y),
+                lambda o: o,
+                outs)
+            return (buf, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+        # only the last stage holds real outputs; replicate via psum
+        outs = jax.lax.psum(
+            jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs)),
+            stage_axis)
+        h = outs.reshape(b, s, d)
+        return _logits(params_stacked, cfg, h)
+
+    return pipeline

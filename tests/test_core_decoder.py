@@ -1,0 +1,170 @@
+"""End-to-end tests for the parallel decoder (the paper's algorithm).
+
+The central invariant: for every sync schedule, chunk size, subsampling
+mode, and quality, the parallel decoder's coefficient output is *bit
+identical* to the strict sequential oracle.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DecodeState,
+    ParallelDecoder,
+    build_batch_plan,
+)
+from repro.core import decode as D
+from repro.core.sync import faithful_sync, jacobi_sync
+from repro.jpeg import codec_ref as cr
+
+import jax.numpy as jnp
+
+from conftest import synth_image
+
+
+def oracle_coeffs(results):
+    return np.concatenate(
+        [cr.undiff_dc(r.image, cr.decode_coefficients(r.image)) for r in results]
+    )
+
+
+def encode_batch(n=3, h=48, w=64, quality=85, sub="4:2:0", **kw):
+    imgs = [synth_image(h, w, seed=s) for s in range(n)]
+    return [cr.encode_baseline(im, quality=quality, subsampling=sub, **kw) for im in imgs]
+
+
+class TestParallelDecoder:
+    @pytest.mark.parametrize("sync", ["sequential", "jacobi", "faithful"])
+    @pytest.mark.parametrize("chunk_bits", [64, 128, 512])
+    def test_exact_vs_oracle(self, sync, chunk_bits):
+        results = encode_batch()
+        dec = ParallelDecoder.from_bytes(
+            [r.jpeg_bytes for r in results], chunk_bits=chunk_bits, sync=sync
+        )
+        out = dec.coefficients()
+        assert out.converged
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
+    @pytest.mark.parametrize("sub", ["4:4:4", "4:2:2", "4:2:0"])
+    def test_subsampling_modes(self, sub):
+        results = encode_batch(sub=sub, n=2)
+        dec = ParallelDecoder.from_bytes(
+            [r.jpeg_bytes for r in results], chunk_bits=128
+        )
+        out = dec.coefficients()
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
+    @pytest.mark.parametrize("quality", [20, 55, 95])
+    def test_quality_ladder(self, quality):
+        results = encode_batch(quality=quality, n=2)
+        dec = ParallelDecoder.from_bytes(
+            [r.jpeg_bytes for r in results], chunk_bits=128
+        )
+        out = dec.coefficients()
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
+    def test_jacobi_equals_faithful_states(self):
+        """Both schedules reach the same fixed point (sequential parse)."""
+        results = encode_batch(n=2)
+        blobs = [r.jpeg_bytes for r in results]
+        plan = build_batch_plan(blobs, chunk_bits=128, seq_chunks=4)
+        dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        ja = jacobi_sync(
+            dev, s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            max_rounds=plan.n_chunks + 2,
+        )
+        fa = faithful_sync(
+            dev, s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            seq_chunks=plan.seq_chunks, max_outer=plan.n_sequences + 2,
+        )
+        for a, b in zip(ja.exits, fa.exits):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_restart_markers_as_segments(self):
+        results = encode_batch(n=2, restart_interval=2)
+        blobs = [r.jpeg_bytes for r in results]
+        dec = ParallelDecoder.from_bytes(blobs, chunk_bits=96)
+        out = dec.coefficients()
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+        assert dec.plan.n_segments > 2  # restart split into multiple segments
+
+    def test_rgb_matches_reference(self):
+        results = encode_batch(n=2)
+        dec = ParallelDecoder.from_bytes([r.jpeg_bytes for r in results],
+                                         chunk_bits=128)
+        out = dec.decode(emit="rgb")
+        for i, r in enumerate(results):
+            exp = cr.decode_baseline(r.jpeg_bytes)
+            got = np.asarray(out.rgb[i])
+            assert np.abs(got.astype(int) - exp.astype(int)).max() <= 1
+
+    def test_optimized_huffman_tables(self):
+        results = encode_batch(n=2, optimize_huffman=True)
+        dec = ParallelDecoder.from_bytes([r.jpeg_bytes for r in results],
+                                         chunk_bits=128)
+        out = dec.coefficients()
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
+    def test_grayscale_batch(self):
+        imgs = [synth_image(32, 32, seed=s)[..., 0] for s in range(2)]
+        results = [cr.encode_baseline(im, quality=80) for im in imgs]
+        dec = ParallelDecoder.from_bytes([r.jpeg_bytes for r in results],
+                                         chunk_bits=96)
+        out = dec.decode(emit="rgb")
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+        assert out.rgb.shape == (2, 32, 32)
+
+    def test_mixed_quality_batch(self):
+        """Images with different tables in one batch (LUT dedup paths)."""
+        blobs, results = [], []
+        for q in (30, 60, 95):
+            r = cr.encode_baseline(synth_image(48, 64, seed=q), quality=q)
+            results.append(r)
+            blobs.append(r.jpeg_bytes)
+        dec = ParallelDecoder.from_bytes(blobs, chunk_bits=160)
+        out = dec.coefficients()
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        chunk_words=st.integers(2, 24),
+        quality=st.sampled_from([25, 50, 75, 95]),
+    )
+    def test_property_any_chunking_is_exact(self, seed, chunk_words, quality):
+        """Invariant: chunk framing never changes the decoded output."""
+        img = synth_image(40, 40, seed=seed % 97, noise=25.0)
+        r = cr.encode_baseline(img, quality=quality)
+        dec = ParallelDecoder.from_bytes(
+            [r.jpeg_bytes], chunk_bits=32 * chunk_words, sync="jacobi"
+        )
+        out = dec.coefficients()
+        assert out.converged
+        exp = cr.undiff_dc(r.image, cr.decode_coefficients(r.image))
+        assert np.array_equal(np.asarray(out.coeffs), exp)
+
+
+class TestDecodeInternals:
+    def test_fetch_window32(self):
+        words = jnp.asarray(
+            np.array([0xDEADBEEF, 0x12345678, 0], dtype=np.uint32)
+        )
+        base = jnp.zeros(3, jnp.int32)
+        p = jnp.asarray([0, 4, 32], jnp.int32)
+        got = D.fetch_window32(words, base, p)
+        assert int(got[0]) == 0xDEADBEEF
+        assert int(got[1]) == 0xEADBEEF1
+        assert int(got[2]) == 0x12345678
+
+    def test_segmented_cumsum_resets(self):
+        vals = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+        first = jnp.asarray([True, False, False, True, False])
+        out = D.segmented_exclusive_cumsum(vals, first)
+        assert out.tolist() == [0, 1, 3, 0, 4]
+
+    def test_cold_state(self):
+        st_ = DecodeState.cold(jnp.asarray([0, 128], jnp.int32))
+        assert st_.p.tolist() == [0, 128]
+        assert st_.u.tolist() == [0, 0]
+        assert st_.z.tolist() == [0, 0]

@@ -1,0 +1,40 @@
+"""Integration: the paper's decoder as the VLM input pipeline."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.jpeg_pipeline import JpegVisionPipeline
+from repro.jpeg.encoder import DatasetSpec, build_dataset
+
+
+def test_pipeline_patches_shape_and_stats():
+    ds = build_dataset(DatasetSpec("t", n_images=4, width=64, height=48,
+                                   quality=80))
+    pipe = JpegVisionPipeline(patch=8, embed_dim=64, chunk_bits=256)
+    patches, stats = pipe.patches_for(ds.jpeg_bytes)
+    assert patches.shape == (4, (48 // 8) * (64 // 8), 64)
+    assert patches.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(patches, np.float32)).all()
+    assert stats.n_images == 4
+    assert stats.transfer_saving > 1.0  # decoded >> compressed
+    assert stats.compressed_mb > 0
+
+
+def test_pipeline_batches_iterator():
+    ds = build_dataset(DatasetSpec("t2", n_images=6, width=32, height=32,
+                                   quality=70))
+    pipe = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128)
+    batches = list(pipe.batches(ds, batch_size=3))
+    assert len(batches) == 2
+    for patches, stats in batches:
+        assert patches.shape[0] == 3
+
+
+def test_paper_datasets_registry():
+    from repro.jpeg.encoder import PAPER_DATASETS, scaled_spec
+    assert set(PAPER_DATASETS) == {
+        "newyork", "stata", "tos_1440p", "tos_4k", "tos_8", "tos_14", "tos_20"}
+    s = scaled_spec(PAPER_DATASETS["newyork"], 0.01)
+    assert s.n_images >= 2 and s.width % 16 == 0
+    # quality ladder ordering preserved
+    assert (PAPER_DATASETS["tos_8"].quality > PAPER_DATASETS["tos_14"].quality
+            > PAPER_DATASETS["tos_20"].quality)

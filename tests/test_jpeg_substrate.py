@@ -1,0 +1,212 @@
+"""Tests for the JPEG substrate: tables, format, reference codec."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.jpeg import codec_ref as cr
+from repro.jpeg import tables as T
+from repro.jpeg.format import (
+    pack_bits_to_words,
+    parse_jpeg,
+    stuff_scan,
+    unstuff_scan,
+)
+
+from conftest import synth_image
+
+
+class TestTables:
+    def test_zigzag_is_permutation(self):
+        assert sorted(T.ZIGZAG.tolist()) == list(range(64))
+        assert np.array_equal(T.ZIGZAG[T.INV_ZIGZAG], np.arange(64))
+
+    def test_zigzag_perm_matrix(self):
+        zz = np.arange(64)
+        nat = T.ZIGZAG_PERM @ zz
+        assert np.array_equal(nat[T.ZIGZAG], zz)
+
+    def test_quality_scaling_monotone(self):
+        q10 = T.quality_scaled_quant(T.STD_LUMA_QUANT, 10)
+        q50 = T.quality_scaled_quant(T.STD_LUMA_QUANT, 50)
+        q95 = T.quality_scaled_quant(T.STD_LUMA_QUANT, 95)
+        assert np.all(q10 >= q50) and np.all(q50 >= q95)
+        assert np.array_equal(q50, T.STD_LUMA_QUANT)
+        assert np.all(T.quality_scaled_quant(T.STD_LUMA_QUANT, 100) == 1)
+
+    @pytest.mark.parametrize("key", list(T.STD_SPECS))
+    def test_canonical_codes_prefix_free(self, key):
+        spec = T.STD_SPECS[key]
+        codes, lengths = T.build_canonical_codes(spec)
+        present = [(int(codes[s]), int(lengths[s])) for s in range(256) if lengths[s]]
+        # pad codes to bit strings and check prefix-freeness
+        strs = [format(c, f"0{l}b") for c, l in present]
+        for i, a in enumerate(strs):
+            for j, b in enumerate(strs):
+                if i != j:
+                    assert not b.startswith(a)
+
+    @pytest.mark.parametrize("key", list(T.STD_SPECS))
+    def test_decode_lut_inverts_codes(self, key):
+        kind, _ = key
+        spec = T.STD_SPECS[key]
+        codes, lengths = T.build_canonical_codes(spec)
+        lut = T.build_decode_lut(spec, is_dc=(kind == "dc"))
+        for sym in range(256):
+            l = int(lengths[sym])
+            if l == 0:
+                continue
+            window = int(codes[sym]) << (16 - l)
+            entry = int(lut[window])
+            assert entry & 0x1F == l
+            if kind == "dc":
+                assert (entry >> T.LUT_SIZE_SHIFT) & 0xF == sym
+            else:
+                assert (entry >> T.LUT_SIZE_SHIFT) & 0xF == sym & 0xF
+                assert (entry >> T.LUT_RUN_SHIFT) & 0xF == sym >> 4
+
+    @given(st.integers(-32768, 32767))
+    def test_magnitude_roundtrip(self, v):
+        cat = T.magnitude_category(np.array([v]))
+        bits = T.ones_complement_bits(np.array([v]), cat)
+        assert 0 <= bits[0] < (1 << cat[0]) if v else bits[0] == 0
+        back = T.extend_magnitude(bits, cat)
+        assert back[0] == v
+
+    def test_spec_from_frequencies_legal(self):
+        rng = np.random.default_rng(0)
+        freqs = rng.integers(0, 1000, 256)
+        spec = T.spec_from_frequencies(freqs)
+        assert spec.bits.sum() == len(spec.vals)
+        # every symbol with nonzero frequency must have a code
+        codes, lengths = T.build_canonical_codes(spec)
+        for s in np.nonzero(freqs)[0]:
+            assert lengths[s] > 0
+        assert lengths.max() <= 16
+
+    def test_paper_table1_synchronization(self):
+        """Paper Table I: decoding restarted at a wrong offset resynchronizes.
+
+        We build an equivalent scenario: decode a valid stream starting a few
+        bits in; after a bounded prefix, codeword boundaries must coincide
+        with the true parse (the self-synchronizing property the whole paper
+        rests on).
+        """
+        img = synth_image(16, 16, seed=3)
+        res = cr.encode_baseline(img, quality=85, subsampling="4:4:4")
+        clean, _ = unstuff_scan(res.image.scan_data)
+        lut = T.build_decode_lut(res.image.huffman_specs[("ac", 0)], is_dc=False)
+        words = pack_bits_to_words(clean)
+
+        def boundaries(start):
+            p, out = start, []
+            nbits = len(clean) * 8
+            while p < nbits - 16:
+                w, off = p >> 5, p & 31
+                win = ((int(words[w]) << 32 | int(words[w + 1])) >> (48 - off)) & 0xFFFF
+                entry = int(lut[win])
+                clen = entry & 0x1F
+                size = (entry >> T.LUT_SIZE_SHIFT) & 0xF
+                p += max(1, clen + size)
+                out.append(p)
+            return set(out)
+
+        true_b = boundaries(0)
+        for shift in (3, 5, 7):
+            shifted = boundaries(shift)
+            # synchronization: the tails agree
+            common = true_b & shifted
+            assert common, f"no sync points for shift {shift}"
+            assert max(true_b) in shifted or max(shifted) in true_b
+
+
+class TestFormat:
+    def test_stuff_unstuff_roundtrip(self, rng):
+        data = rng.integers(0, 256, 500).astype(np.uint8)
+        stuffed = stuff_scan(data)
+        clean, rst = unstuff_scan(stuffed)
+        assert np.array_equal(clean, data)
+        assert len(rst) == 0
+
+    def test_unstuff_removes_rst(self):
+        raw = bytes([0x12, 0xFF, 0x00, 0x34, 0xFF, 0xD3, 0x56])
+        clean, rst = unstuff_scan(raw)
+        assert clean.tolist() == [0x12, 0xFF, 0x34, 0x56]
+        assert rst.tolist() == [3 * 8]
+
+    def test_parse_roundtrip_header_fields(self):
+        img = synth_image(24, 40, seed=1)
+        res = cr.encode_baseline(img, quality=75, subsampling="4:2:0")
+        parsed = parse_jpeg(res.jpeg_bytes)
+        assert (parsed.width, parsed.height) == (40, 24)
+        assert parsed.subsampling_name() == "4:2:0"
+        assert parsed.units_per_mcu == 6
+        assert len(parsed.quant_tables) == 2
+        assert len(parsed.huffman_specs) == 4
+
+    def test_pack_bits_to_words_msb_first(self):
+        data = np.array([0b10110000, 0xFF], dtype=np.uint8)
+        words = pack_bits_to_words(data)
+        assert words[0] == 0b10110000111111110000000000000000
+
+
+class TestReferenceCodec:
+    @pytest.mark.parametrize("sub", ["4:4:4", "4:2:2", "4:2:0"])
+    @pytest.mark.parametrize("quality", [30, 75, 95])
+    def test_entropy_roundtrip_exact(self, sub, quality):
+        img = synth_image(48, 64, seed=2)
+        res = cr.encode_baseline(img, quality=quality, subsampling=sub)
+        coeff = cr.decode_coefficients(res.image)
+        assert np.array_equal(coeff, res.coeff_zigzag)
+
+    @pytest.mark.parametrize("quality,tol", [(50, 16.0), (90, 10.0)])
+    def test_pixel_fidelity(self, quality, tol):
+        img = synth_image(32, 48, seed=4, noise=4.0)
+        res = cr.encode_baseline(img, quality=quality, subsampling="4:4:4")
+        rgb = cr.decode_baseline(res.jpeg_bytes)
+        err = np.abs(rgb.astype(int) - img.astype(int)).mean()
+        assert err < tol
+
+    def test_non_mcu_aligned_dimensions(self):
+        img = synth_image(17, 29, seed=5)
+        res = cr.encode_baseline(img, quality=85, subsampling="4:2:0")
+        rgb = cr.decode_baseline(res.jpeg_bytes)
+        assert rgb.shape == (17, 29, 3)
+
+    def test_restart_interval_roundtrip(self):
+        img = synth_image(48, 48, seed=6)
+        res = cr.encode_baseline(
+            img, quality=80, subsampling="4:2:0", restart_interval=2
+        )
+        assert res.image.restart_interval == 2
+        coeff = cr.decode_coefficients(res.image)
+        assert np.array_equal(coeff, res.coeff_zigzag)
+        rgb = cr.decode_baseline(res.jpeg_bytes)
+        assert rgb.shape == img.shape
+
+    def test_optimized_huffman_smaller_and_exact(self):
+        img = synth_image(64, 64, seed=7)
+        std = cr.encode_baseline(img, quality=90)
+        opt = cr.encode_baseline(img, quality=90, optimize_huffman=True)
+        assert len(opt.jpeg_bytes) < len(std.jpeg_bytes)
+        assert np.array_equal(
+            cr.decode_coefficients(opt.image), opt.coeff_zigzag
+        )
+
+    def test_grayscale(self):
+        img = synth_image(24, 24, seed=8)[..., 0]
+        res = cr.encode_baseline(img, quality=85)
+        out = cr.decode_baseline(res.jpeg_bytes)
+        assert out.shape == img.shape
+
+    def test_dct_matrix_orthonormal(self):
+        C = cr.dct_matrix()
+        assert np.allclose(C @ C.T, np.eye(8), atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(9, 40), st.integers(9, 40))
+    def test_property_entropy_roundtrip_random(self, seed, h, w):
+        img = synth_image(h, w, seed=seed % 1000, noise=20.0)
+        res = cr.encode_baseline(img, quality=60, subsampling="4:2:0")
+        coeff = cr.decode_coefficients(res.image)
+        assert np.array_equal(coeff, res.coeff_zigzag)
