@@ -24,11 +24,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import decode as D
+from ..dist import sharding as S
 from .bitstream import BatchPlan, build_batch_plan
 from .state import DecodeState
 from .sync import SyncResult, faithful_sync, jacobi_sync, specmap_sync
 
 Array = jnp.ndarray
+
+# Chunk-lane-indexed device arrays: one element per subsequence chunk.
+# Constraining these under active logical rules shards every lane-parallel
+# decode_span/sync loop over the data axis (GSPMD propagates the spec
+# through the while loops); off-mesh the constraint is a no-op.
+_LANE_KEYS = ("chunk_start", "chunk_limit", "chunk_seg", "chunk_seq",
+              "chunk_first", "chunk_seq_first")
+
+
+def _shard_lanes(dev: Dict[str, Array]) -> Dict[str, Array]:
+    out = dict(dev)
+    for k in _LANE_KEYS:
+        if k in out:
+            out[k] = S.shard(out[k], "chunks")
+    return out
+
+
+def _decode_rules(mesh) -> Dict:
+    """Logical rules for the decoder hot path on a given mesh."""
+    axis = "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+    return {"chunks": (axis,), "units": (axis,), "batch": (axis,)}
 
 
 @dataclasses.dataclass
@@ -58,8 +80,12 @@ class ParallelDecoder:
         self._idct_impl = idct_impl or D.idct_units_folded
         p = plan
 
-        @jax.jit
-        def _coeffs(dev: Dict[str, Array]):
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def _coeffs(dev: Dict[str, Array], trace_token):
+            # trace_token keys the jit cache on the ambient (mesh, rules)
+            # context that S.shard reads at trace time; unused in the body
+            del trace_token
+            dev = _shard_lanes(dev)
             if sync == "specmap":
                 from .bitstream import MAX_UPM
                 res = specmap_sync(
@@ -101,7 +127,7 @@ class ParallelDecoder:
                 write=True, out=out, write_base=bases, write_max=write_max,
             )
             coeffs = out.reshape(p.total_units, 64)
-            coeffs = D.undiff_dc(dev, coeffs)
+            coeffs = S.shard(D.undiff_dc(dev, coeffs), "units", None)
             return coeffs, res.rounds, res.converged
 
         self._coeffs_fn = _coeffs
@@ -111,8 +137,10 @@ class ParallelDecoder:
             comp_unit_idx = [jnp.asarray(a) for a in p.comp_unit_idx]
             comp_block_idx = [jnp.asarray(a) for a in p.comp_block_idx]
 
-            @jax.jit
-            def _pixels(dev: Dict[str, Array], coeffs: Array):
+            @functools.partial(jax.jit, static_argnums=(2,))
+            def _pixels(dev: Dict[str, Array], coeffs: Array, trace_token):
+                del trace_token
+                coeffs = S.shard(coeffs, "units", None)
                 pix = self._idct_impl(coeffs, dev["m_matrices"], dev["unit_mrow"])
                 planes = D.assemble_planes(
                     pix, p.n_images, comp_unit_idx, comp_block_idx, p.comp_grid
@@ -142,7 +170,7 @@ class ParallelDecoder:
 
     # -- execution ------------------------------------------------------------
     def coefficients(self) -> DecodeOutput:
-        coeffs, rounds, conv = self._coeffs_fn(self.dev)
+        coeffs, rounds, conv = self._coeffs_fn(self.dev, S.trace_token())
         return DecodeOutput(coeffs, None, None, int(rounds), bool(conv), self.plan)
 
     def decode(self, emit: str = "rgb") -> DecodeOutput:
@@ -154,10 +182,39 @@ class ParallelDecoder:
                 "pixel stage requires a geometry-uniform batch; decode images "
                 "with mixed geometry via bucketing in repro.data.jpeg_pipeline"
             )
-        planes, rgb = self._pixels_fn(self.dev, out.coeffs)
+        planes, rgb = self._pixels_fn(self.dev, out.coeffs, S.trace_token())
         return dataclasses.replace(
             out, planes=planes, rgb=rgb if emit == "rgb" else None
         )
+
+    def decode_on(self, mesh, emit: str = "rgb",
+                  rules: Optional[Dict] = None) -> DecodeOutput:
+        """Decode with chunk lanes and output units sharded over the mesh's
+        data axis — the multi-device batch-decode path. Bit-identical to
+        :meth:`decode`; only the work placement changes.
+
+        The decoder is purely data-parallel (no model dimension), so by
+        default a multi-axis mesh is flattened to a 1-D lane mesh over
+        the same devices: every chip becomes a lane worker, and the
+        partial replication a 2-D mesh would induce — which the CPU SPMD
+        partitioner has been observed to mis-compile for this scatter-
+        heavy program — never arises. Caller-supplied ``rules`` name the
+        axes of ``mesh`` itself and therefore require a 1-D mesh: any
+        multi-axis mesh would reintroduce that partial replication, so
+        the combination is rejected rather than silently re-mapped.
+        """
+        if rules is None:
+            if len(mesh.axis_names) > 1:
+                mesh = jax.sharding.Mesh(mesh.devices.reshape(-1), ("data",))
+            rules = _decode_rules(mesh)
+        elif len(mesh.axis_names) > 1:
+            raise ValueError(
+                "decode_on(rules=...) requires a 1-D mesh; flatten the mesh "
+                "(e.g. Mesh(mesh.devices.reshape(-1), ('data',))) or omit "
+                "rules to let the decoder flatten it"
+            )
+        with mesh, S.logical_rules(rules):
+            return self.decode(emit=emit)
 
 
 def _entries_from(dev, exits: DecodeState) -> DecodeState:
@@ -172,8 +229,17 @@ def decode_batch(
     seq_chunks: int = 32,
     sync: str = "jacobi",
     emit: str = "rgb",
+    mesh=None,
 ) -> DecodeOutput:
-    """One-shot convenience wrapper (builds the plan + compiles + decodes)."""
-    return ParallelDecoder.from_bytes(
+    """One-shot convenience wrapper (builds the plan + compiles + decodes).
+
+    With ``mesh``, the decode runs under ``dist.sharding.logical_rules``
+    with the chunk lanes sharded over the data axis: one compiled program,
+    work divided across every device in the mesh.
+    """
+    dec = ParallelDecoder.from_bytes(
         blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync
-    ).decode(emit=emit)
+    )
+    if mesh is None:
+        return dec.decode(emit=emit)
+    return dec.decode_on(mesh, emit=emit)

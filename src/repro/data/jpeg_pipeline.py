@@ -42,12 +42,15 @@ class JpegVisionPipeline:
 
     def __init__(self, patch: int = 16, embed_dim: int = 1024,
                  chunk_bits: int = 1024, sync: str = "jacobi",
-                 use_kernels: bool = False, seed: int = 0):
+                 use_kernels: bool = False, seed: int = 0, mesh=None):
         self.patch = patch
         self.embed_dim = embed_dim
         self.chunk_bits = chunk_bits
         self.sync = sync
         self.use_kernels = use_kernels
+        # with a mesh, decode work (chunk lanes / output units) is sharded
+        # over the data axis — the input pipeline scales with the job
+        self.mesh = mesh
         rng = np.random.default_rng(seed)
         # stub patch-embedding projection (fixed; a real run would train it)
         self.w_embed = jnp.asarray(
@@ -66,7 +69,10 @@ class JpegVisionPipeline:
     def patches_for(self, blobs: Sequence[bytes]):
         """(B, n_patches, embed_dim) patch tokens + stats."""
         dec = self._decoder(blobs)
-        out = dec.decode(emit="rgb")
+        if self.mesh is not None:
+            out = dec.decode_on(self.mesh, emit="rgb")
+        else:
+            out = dec.decode(emit="rgb")
         rgb = out.rgb  # (B, H, W, 3) uint8 on device
         b, h, w, _ = rgb.shape
         p = self.patch

@@ -1,0 +1,18 @@
+"""Distribution substrate.
+
+Four pieces, each importable on a single host with zero configuration:
+
+* :mod:`~repro.dist.sharding` — logical-axis -> mesh-axis rules, the
+  ``shard(x, *logical_axes)`` activation constraint used throughout the
+  model and decoder code (no-op off-mesh).
+* :mod:`~repro.dist.plan` — turns (config, mesh, workload kind) into
+  concrete rules and NamedSharding trees for params / batches / caches.
+* :mod:`~repro.dist.collectives` — HLO-text collective-traffic accounting
+  for the dry-run roofline.
+* :mod:`~repro.dist.fault` — step timing + straggler detection for the
+  training driver.
+
+See docs/DISTRIBUTION.md for the full design.
+"""
+from . import collectives, fault, plan, sharding  # noqa: F401
+from .sharding import DEFAULT_RULES, logical_rules, resolve, shard  # noqa: F401

@@ -1,0 +1,98 @@
+"""Collective-traffic accounting from compiled HLO text.
+
+The dry-run lowers every (arch x shape x mesh) cell and needs the bytes
+moved by each collective kind for the roofline's interconnect term. XLA
+does not expose this directly, so we parse the post-SPMD HLO: every
+collective instruction's *result* shape(s) are the bytes that cross the
+interconnect once (all-reduce counts its full operand; start/done pairs
+count once, on the start).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+# Collective op kinds we account for (async "-start" forms fold into the
+# base kind; "-done" forms are skipped to avoid double counting).
+KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# "%name = <result type(s)> <op>(" — result types are either one
+# "dtype[shape]{layout}" or a tuple "(t1, t2, ...)".
+_INSTR = re.compile(
+    r"=\s*(?P<types>\(.*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)"
+    r"\s+(?P<op>[a-z][a-z0-9-]*)\("
+)
+_SHAPE = re.compile(r"([a-z]+[0-9]*)\[([0-9,\s]*)\]")
+
+
+def _element_bytes(types: str):
+    out = []
+    for dtype, dims in _SHAPE.findall(types):
+        bpe = _DTYPE_BYTES.get(dtype)
+        if bpe is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        out.append((dtype, n * bpe))
+    return out
+
+
+def _start_output_bytes(op: str, elems) -> int:
+    """Bytes for an async ``-start`` bundle, counted once.
+
+    all-reduce-start's tuple elements are all results (variadic
+    all-reduce), so every element counts. The other ``-start`` forms
+    bundle (operands..., outputs...) plus u32[] context scalars
+    (collective-permute): strip the contexts, count the output half.
+    """
+    if op == "all-reduce" or len(elems) < 2:
+        return sum(b for _, b in elems)
+    data = [b for dt, b in elems if not (dt.startswith("u32") and b <= 4)]
+    if len(data) % 2:
+        return sum(data)  # unexpected layout: fall back to counting all
+    return sum(data[len(data) // 2:])
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes per collective kind appearing in the HLO text."""
+    per: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op.endswith("-done"):
+            continue
+        start = op.endswith("-start")
+        if start:
+            op = op[: -len("-start")]
+        if op not in KINDS:
+            continue
+        elems = _element_bytes(m.group("types"))
+        per[op] += (_start_output_bytes(op, elems) if start
+                    else sum(b for _, b in elems))
+    return dict(per)
+
+
+def summarize(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """(total collective bytes, {kind: bytes}) — zero-traffic kinds omitted."""
+    per = {k: v for k, v in collective_bytes(hlo_text).items() if v}
+    return sum(per.values()), per

@@ -1,0 +1,151 @@
+"""Sharding plans: (config, mesh, workload) -> rules and sharding trees.
+
+The planner is deliberately analytic — no search. Given a mesh it assigns:
+
+* batch-like logical axes ("batch", decoder "chunks"/"units") to the data
+  axes (["pod",] "data"), dropped when the global batch does not divide;
+* tensor-parallel width axes ("heads", "kv_heads", "mlp", "experts",
+  "vocab") to the "model" axis, with a per-config divisibility audit over
+  the *actual* parameter shapes (``param_rules``) so ``device_put`` and
+  lowering never see an invalid spec;
+* everything else replicated.
+
+``param_shardings`` / ``batch_shardings`` / ``cache_shardings`` turn rules
+into NamedSharding pytrees matching the trees the launch code feeds to
+``jax.jit`` in/out shardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import Rules, _normalize, resolve
+
+# logical axes that only ever label activations / data, never parameters
+_ACTIVATION_ONLY = ("batch", "seq", "kv_seq", "chunks", "units")
+
+
+def _axes_size(mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def rules_for(cfg, mesh, kind: str, batch: int) -> Rules:
+    """Logical rules for one workload cell.
+
+    kind: "train" | "prefill" | "decode". ``batch`` is the global batch
+    size; batch sharding is dropped when it does not divide the data axes.
+    """
+    names = set(mesh.axis_names)
+    data = tuple(a for a in ("pod", "data") if a in names)
+    model = ("model",) if "model" in names else ()
+    if data and batch % _axes_size(mesh, data) != 0:
+        data = ()
+    rules: Rules = {
+        "batch": data,
+        "seq": (),
+        "kv_seq": (),
+        "embed": (),
+        "heads": model,
+        "kv_heads": model,
+        "mlp": model,
+        "experts": model,
+        "vocab": model,
+        "chunks": data,
+        "units": data,
+    }
+    if kind == "decode" and getattr(cfg, "decode_kv_shard", "none") == "seq":
+        # sequence-parallel KV cache: spread the 500k-token cache length
+        # over the model axis instead of the (absent) head parallelism
+        rules["kv_seq"] = model
+    return rules
+
+
+def param_rules(rules: Rules, cfg, mesh) -> Rules:
+    """Parameter-side rules: activation-only axes stripped, and any axis
+    whose labelled parameter dimensions do not all divide its mesh extent
+    is demoted to replicated (audited against the abstract param tree)."""
+    prules: Rules = {k: _normalize(v) for k, v in rules.items()
+                     if k not in _ACTIVATION_ONLY}
+    from ..models.model import abstract_params  # lazy: models import us
+
+    model = abstract_params(cfg)
+    specs = jax.tree.leaves(model.specs, is_leaf=_is_spec)
+    params = jax.tree.leaves(model.params)
+    bad = set()
+    for spec, leaf in zip(specs, params):
+        for dim, name in zip(leaf.shape, spec):
+            if name is None or name not in prules:
+                continue
+            axes = tuple(a for a in prules[name] if a in mesh.shape)
+            if axes and dim % _axes_size(mesh, axes) != 0:
+                bad.add(name)
+    for name in bad:
+        prules[name] = ()
+    return prules
+
+
+def param_shardings(specs, prules: Rules, mesh):
+    """NamedSharding tree parallel to a Model.specs logical-axis tree."""
+    filtered = {k: tuple(a for a in _normalize(v) if a in mesh.shape)
+                for k, v in prules.items()}
+
+    def one(spec):
+        return NamedSharding(mesh, resolve(spec, rules=filtered))
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def batch_shardings(specs, rules: Rules, mesh):
+    """Shard every batch input over its leading (batch) dimension."""
+    axes = tuple(a for a in _normalize(rules.get("batch"))
+                 if a in mesh.shape)
+
+    def one(leaf):
+        if (not axes or leaf.ndim == 0
+                or leaf.shape[0] % _axes_size(mesh, axes) != 0):
+            return NamedSharding(mesh, P())
+        entry = axes[0] if len(axes) == 1 else axes
+        return NamedSharding(mesh, P(entry, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, specs)
+
+
+def cache_shardings(cfg, rules: Rules, mesh, with_enc_out: bool = False):
+    """NamedSharding tree matching ``init_caches``/``abstract_caches``.
+
+    Caches are sharded over batch only (dim 0 for prefix layers, dim 1 for
+    the period-stacked pattern slots); scalars (fill lengths) replicate.
+    The kv_seq rule applies to *activations* via the shard() calls in
+    attention.py — cache layout stays batch-sharded so elastic re-mesh
+    restores stay trivial.
+    """
+    from ..models.model import init_caches  # lazy: models import us
+
+    proto = jax.eval_shape(lambda: init_caches(cfg, 2, 8))
+    axes = tuple(a for a in _normalize(rules.get("batch"))
+                 if a in mesh.shape)
+    entry = None if not axes else (axes[0] if len(axes) == 1 else axes)
+
+    def one_at(bdim):
+        def one(leaf):
+            if entry is None or leaf.ndim <= bdim:
+                return NamedSharding(mesh, P())
+            dims = [None] * leaf.ndim
+            dims[bdim] = entry
+            return NamedSharding(mesh, P(*dims))
+        return one
+
+    out: Dict[str, Any] = {
+        "prefix": [jax.tree.map(one_at(0), c) for c in proto["prefix"]],
+        "pattern": jax.tree.map(one_at(1), proto["pattern"]),
+    }
+    if with_enc_out:
+        out["enc_out"] = NamedSharding(mesh, P(entry))
+    return out

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules (t5x/flax-partitioning idiom, trimmed).
+
+Model and decoder code annotates arrays with *logical* axis names
+("batch", "heads", "chunks", ...). A rule set maps logical names to mesh
+axis names; :func:`shard` applies the mapping as a
+``with_sharding_constraint`` when (and only when) both a rule context and
+a mesh are active — otherwise it is a no-op, so the same model code runs
+unmodified on a single device, under ``jit`` on a mesh, or inside
+``shard_map`` bodies (where no rules are active).
+
+Rules are *replaced*, not merged, by :func:`logical_rules` — a context's
+rule set is exactly what the caller passes (start from
+:data:`DEFAULT_RULES` and edit to taste, or use ``plan.rules_for``).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Baseline rules for a ("data", "model") mesh — the recommended starting
+# point. Activation/batch-like axes ride the data axis; the tensor-parallel
+# width axes ride the model axis; everything else is replicated.
+DEFAULT_RULES: Rules = {
+    # model activations / params
+    "batch": ("data",),
+    "seq": (),
+    "kv_seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    # JPEG decoder lanes (core/api.py): subsequence chunks and output units
+    "chunks": ("data",),
+    "units": ("data",),
+}
+
+
+_STATE = threading.local()
+
+
+def _current_rules() -> Optional[Rules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Rules):
+    """Activate a logical->mesh axis rule set for the enclosed trace/run."""
+    prev = _current_rules()
+    _STATE.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def _normalize(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def resolve(logical_axes: Sequence[Optional[str]],
+            rules: Optional[Rules] = None) -> PartitionSpec:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    Unknown logical names resolve to ``None`` (replicated). A mesh axis may
+    appear only once per spec; later duplicates are suppressed (first
+    occurrence wins), matching XLA's one-use-per-spec rule.
+    """
+    if rules is None:
+        rules = _current_rules() or {}
+    used = set()
+    dims = []
+    for name in logical_axes:
+        axes = _normalize(rules.get(name)) if name is not None else ()
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            dims.append(None)
+        elif len(axes) == 1:
+            dims.append(axes[0])
+        else:
+            dims.append(axes)
+    return PartitionSpec(*dims)
+
+
+_mesh_probe_warned = False
+
+
+def _active_mesh():
+    """The mesh from an enclosing ``with mesh:`` block, or None."""
+    global _mesh_probe_warned
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - jax internals moved
+        if not _mesh_probe_warned:
+            _mesh_probe_warned = True
+            import warnings
+            warnings.warn(
+                "repro.dist.sharding could not read the active mesh from "
+                "jax internals (thread_resources moved?); shard() will be "
+                "a no-op and all work runs unsharded", RuntimeWarning)
+        return None
+
+
+def trace_token():
+    """Hashable snapshot of the active (mesh, rules) context.
+
+    Thread-local rules and the mesh context are read at *trace* time and
+    are invisible to ``jax.jit``'s cache key. Pass this token as a static
+    argument to any jitted function whose body calls :func:`shard`, so a
+    rules/mesh change re-traces instead of silently reusing the previous
+    context's constraints.
+    """
+    rules = _current_rules()
+    mesh = _active_mesh()
+    if not rules or mesh is None:
+        return None
+    return (mesh, tuple(sorted((k, _normalize(v)) for k, v in rules.items())))
+
+
+def shard(x, *logical_axes):
+    """Constrain ``x`` to the sharding the active rules give its axes.
+
+    No-op when no :func:`logical_rules` context is active, when no mesh is
+    active, or when every axis resolves to replicated. Mesh axes absent
+    from the active mesh (or of size 1) are dropped, so one rule set works
+    across differently shaped meshes.
+    """
+    rules = _current_rules()
+    if not rules:
+        return x
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = resolve(logical_axes, rules)
+    dims = []
+    nontrivial = False
+    for entry in spec:
+        axes = tuple(a for a in _normalize(entry)
+                     if a in mesh.shape and mesh.shape[a] > 1)
+        if not axes:
+            dims.append(None)
+        else:
+            nontrivial = True
+            dims.append(axes[0] if len(axes) == 1 else axes)
+    if not nontrivial:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*dims)))

@@ -116,14 +116,16 @@ def ssd_forward(
     proj = jnp.einsum("bsd,de->bse", x, params[f"{name}.w_in"])
     z, xbc, dt, di, nh = _split_in(cfg, proj)
 
-    # causal depthwise conv over (x, B, C) channels
+    # causal depthwise conv over (x, B, C) channels — accumulated in f32
+    # and rounded once, bit-matching ssd_decode_step's f32 sum-of-products
     w = params[f"{name}.conv_w"]                  # (K, C)
     k = s_cfg.d_conv
     pad_in = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
     conv = sum(
-        pad_in[:, i : i + s, :] * w[i][None, None, :] for i in range(k)
-    ) + params[f"{name}.conv_b"][None, None, :]
-    conv = jax.nn.silu(conv)
+        pad_in[:, i : i + s, :].astype(jnp.float32)
+        * w[i].astype(jnp.float32)[None, None, :] for i in range(k)
+    ) + params[f"{name}.conv_b"].astype(jnp.float32)[None, None, :]
+    conv = jax.nn.silu(conv).astype(xbc.dtype)
 
     xh, bmat, cmat = jnp.split(conv, [di, di + s_cfg.d_state], axis=-1)
     xh = xh.reshape(bsz, s, nh, s_cfg.head_dim)
@@ -158,8 +160,11 @@ def ssd_decode_step(
     k = s_cfg.d_conv
     w = params[f"{name}.conv_w"]
     window = jnp.concatenate([cache.conv, xbc], axis=1)      # (B, k, C)
-    conv = jnp.einsum("bkc,kc->bc", window, w) + params[f"{name}.conv_b"]
-    conv = jax.nn.silu(conv)[:, None, :]
+    conv = sum(
+        window[:, i, :].astype(jnp.float32) * w[i].astype(jnp.float32)[None, :]
+        for i in range(k)
+    ) + params[f"{name}.conv_b"].astype(jnp.float32)[None, :]
+    conv = jax.nn.silu(conv).astype(xbc.dtype)[:, None, :]
     xh, bmat, cmat = jnp.split(conv, [di, di + s_cfg.d_state], axis=-1)
     xh = xh.reshape(bsz, nh, s_cfg.head_dim)                 # (B,H,P)
     bmat = bmat[:, 0]                                        # (B,N)

@@ -1,0 +1,85 @@
+"""Offline stand-in for the tiny `hypothesis` subset this suite uses.
+
+Real hypothesis is preferred when installed (the importing test modules
+try it first); this shim keeps the property tests collecting and running
+in network-less environments. It draws a fixed number of examples from a
+deterministic per-test RNG (seeded from the test's qualified name), so
+runs are reproducible — no shrinking, no database, no deadlines.
+
+Supported surface:
+  given(*strategies, **strategies)  — positional and keyword styles
+  settings(max_examples=, deadline=) — outer decorator, others ignored
+  strategies.integers / sampled_from / booleans
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            n = (getattr(wrapper, "_compat_max_examples", None)
+                 or _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for _ in range(n):
+                pos = tuple(s.draw(rng) for s in arg_strategies)
+                kws = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*call_args, *pos, **kws, **call_kwargs)
+
+        # hide strategy-bound parameters from pytest's fixture resolution:
+        # positional strategies bind the trailing parameters, keyword
+        # strategies bind by name (hypothesis semantics)
+        params = list(inspect.signature(fn).parameters.values())
+        drop = set(kw_strategies)
+        if arg_strategies:
+            positional = [p for p in params if p.kind in
+                          (inspect.Parameter.POSITIONAL_ONLY,
+                           inspect.Parameter.POSITIONAL_OR_KEYWORD)]
+            drop |= {p.name for p in positional[-len(arg_strategies):]}
+        wrapper.__signature__ = inspect.Signature(
+            [p for p in params if p.name not in drop])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -2,6 +2,11 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (forced device count)")
+
+
 def synth_image(height: int, width: int, seed: int = 0, noise: float = 10.0):
     """Photographic-like synthetic RGB test image."""
     r = np.random.default_rng(seed)

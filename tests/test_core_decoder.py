@@ -6,8 +6,13 @@ identical* to the strict sequential oracle.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # real hypothesis when installed; offline deterministic shim otherwise
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.core import (
     DecodeState,
@@ -143,6 +148,58 @@ class TestParallelDecoder:
         assert out.converged
         exp = cr.undiff_dc(r.image, cr.decode_coefficients(r.image))
         assert np.array_equal(np.asarray(out.coeffs), exp)
+
+
+class TestSyncSchedulesAgree:
+    """sync.py docstring claim: faithful and Jacobi schedules return
+    bit-identical exit states — checked across random images and
+    (chunk_bits, seq_chunks) framings."""
+
+    @pytest.mark.parametrize("chunk_bits,seq_chunks", [(64, 2), (128, 4),
+                                                       (256, 8)])
+    def test_exit_states_bit_identical(self, chunk_bits, seq_chunks):
+        imgs = [synth_image(40, 56, seed=10 + i, noise=18.0)
+                for i in range(3)]
+        blobs = [cr.encode_baseline(im, quality=q).jpeg_bytes
+                 for im, q in zip(imgs, (35, 70, 92))]
+        plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
+                                seq_chunks=seq_chunks)
+        dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        ja = jacobi_sync(dev, s_max=plan.s_max,
+                         min_code_bits=plan.min_code_bits,
+                         max_rounds=plan.n_chunks + 2)
+        fa = faithful_sync(dev, s_max=plan.s_max,
+                           min_code_bits=plan.min_code_bits,
+                           seq_chunks=plan.seq_chunks,
+                           max_outer=plan.n_sequences + 2)
+        assert bool(ja.converged) and bool(fa.converged)
+        for a, b in zip(ja.exits, fa.exits):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDecodeEdgePaths:
+    def _mixed_geometry(self):
+        """Two images whose scan geometry differs -> non-uniform plan."""
+        results = [
+            cr.encode_baseline(synth_image(48, 64, seed=0), quality=80),
+            cr.encode_baseline(synth_image(32, 32, seed=1), quality=80),
+        ]
+        dec = ParallelDecoder.from_bytes(
+            [r.jpeg_bytes for r in results], chunk_bits=128)
+        assert not dec.plan.uniform
+        return results, dec
+
+    def test_coeffs_on_mixed_geometry_batch(self):
+        results, dec = self._mixed_geometry()
+        out = dec.decode(emit="coeffs")
+        assert out.planes is None and out.rgb is None
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
+    def test_pixel_stage_on_mixed_geometry_raises(self):
+        _, dec = self._mixed_geometry()
+        with pytest.raises(NotImplementedError,
+                           match="geometry-uniform batch"):
+            dec.decode(emit="rgb")
 
 
 class TestDecodeInternals:

@@ -1,8 +1,13 @@
 """Tests for the JPEG substrate: tables, format, reference codec."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # real hypothesis when installed; offline deterministic shim otherwise
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.jpeg import codec_ref as cr
 from repro.jpeg import tables as T
