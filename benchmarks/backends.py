@@ -1,0 +1,37 @@
+"""Beyond-paper: decode-backend comparison (jnp reference vs Pallas kernels).
+
+Times the full decode (sync + write pass + pixel stages) per sync schedule
+on both backends and reports the speedup. On the CPU CI container the
+Pallas backend runs in interpret mode, so the ratio there measures
+interpreter overhead, not kernel quality — the row exists to (a) prove the
+backend is live end-to-end on every schedule and (b) give TPU/GPU runs a
+ready-made A/B (same invocation, compiled kernels).
+"""
+from __future__ import annotations
+
+from .common import decode_time, emit, load_dataset
+
+
+def run_rows():
+    rows = []
+    ds = load_dataset("newyork")
+    for sync in ("jacobi", "faithful", "specmap", "sequential"):
+        times = {}
+        for backend in ("jnp", "pallas"):
+            t, dec = decode_time(ds, sync, backend=backend, rounds=2)
+            times[backend] = t
+        rows.append({
+            "name": f"backends/newyork/{sync}",
+            "us_per_call": times["pallas"] * 1e6,
+            "derived": (f"jnp_us={times['jnp']*1e6:.1f}"
+                        f";pallas_over_jnp={times['pallas']/times['jnp']:.2f}x"),
+        })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,9 @@ from repro.jpeg.encoder import PAPER_DATASETS, Dataset, build_dataset, \
 # The *structure* (relative sizes, qualities, subsequence sizes) is kept.
 BENCH_SCALE = float(os.environ.get("BENCH_SCALE", "0.02"))
 CACHE_DIR = os.environ.get("BENCH_CACHE", "/tmp/repro_datasets")
+# Decode backend for every suite: "jnp" (reference) or "pallas" (kernels,
+# interpret mode on CPU — see repro.kernels.backend for overrides).
+BENCH_BACKEND = os.environ.get("BENCH_BACKEND", "jnp")
 
 
 def load_dataset(name: str, scale: float = None) -> Dataset:
@@ -38,10 +41,11 @@ def time_call(fn: Callable, *args, warmup: int = 1, rounds: int = 3) -> float:
 
 
 def decode_time(ds: Dataset, sync: str, chunk_bits: int = None,
-                rounds: int = 3) -> Tuple[float, ParallelDecoder]:
+                rounds: int = 3, backend: str = None
+                ) -> Tuple[float, ParallelDecoder]:
     dec = ParallelDecoder.from_bytes(
         ds.jpeg_bytes, chunk_bits=chunk_bits or ds.spec.subsequence_bits,
-        sync=sync)
+        sync=sync, backend=backend or BENCH_BACKEND)
 
     def run():
         out = dec.decode(emit="rgb")

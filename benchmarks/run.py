@@ -5,24 +5,48 @@ Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run              # all
   PYTHONPATH=src python -m benchmarks.run breakdown    # one table
   BENCH_SCALE=0.05 PYTHONPATH=src python -m benchmarks.run datasets
+
+With ``BENCH_JSON=path.json`` the same rows (plus the run configuration)
+are also written as a JSON artifact — CI uploads one per run so perf is
+diffable across commits.
 """
+import json
+import os
 import sys
 
 
 def main() -> None:
-    from . import breakdown, datasets, quality, subseq_size
-    from .common import emit
+    from . import backends, breakdown, datasets, quality, subseq_size
+    from .common import BENCH_BACKEND, BENCH_SCALE, emit
 
     suites = {
         "datasets": datasets,     # Fig. 4/5 + Fig. 8
         "quality": quality,       # Fig. 6/7 + Fig. 9
         "breakdown": breakdown,   # Fig. 3
         "subseq_size": subseq_size,  # Table II/III subsequence column
+        "backends": backends,     # beyond-paper: jnp vs Pallas kernels
     }
     wanted = sys.argv[1:] or list(suites)
+    all_rows = []
     print("name,us_per_call,derived")
     for name in wanted:
-        emit(suites[name].run_rows())
+        rows = suites[name].run_rows()
+        emit(rows)
+        all_rows.extend(rows)
+
+    json_path = os.environ.get("BENCH_JSON")
+    if json_path:
+        payload = {
+            "scale": BENCH_SCALE,
+            # the env default; the "backends" suite sweeps both backends
+            # per row regardless (see its name/derived fields)
+            "default_backend": BENCH_BACKEND,
+            "suites": wanted,
+            "rows": all_rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path} ({len(all_rows)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--height", type=int, default=192)
     ap.add_argument("--quality", type=int, default=85)
     ap.add_argument("--chunk-bits", type=int, default=1024)
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
+                    help="decode backend (pallas = kernels; compiled on "
+                         "TPU/GPU, interpret mode on CPU)")
     args = ap.parse_args()
 
     ds = build_dataset(DatasetSpec("serve", args.images, args.width,
@@ -38,7 +41,7 @@ def main():
     for mode in ("jacobi", "faithful", "sequential"):
         dec = ParallelDecoder.from_bytes(ds.jpeg_bytes,
                                          chunk_bits=args.chunk_bits,
-                                         sync=mode)
+                                         sync=mode, backend=args.backend)
         # warmup/compile
         out = dec.decode(emit="rgb")
         out.rgb.block_until_ready()

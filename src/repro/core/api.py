@@ -12,6 +12,13 @@ Sync schedules:   "jacobi" (default, beyond-paper), "faithful" (paper
 Algorithm 3), "sequential" (one chunk per segment — the per-image-parallel
 baseline that stands in for nvJPEG's hybrid mode; with a single image this
 is the libjpeg-style fully sequential baseline).
+
+Decode backends:  "jnp" (default; the pure-JAX reference hot loop) and
+"pallas" (the kernels under repro.kernels — Huffman subsequence decode,
+coefficient write pass, and fused IDCT). Every sync schedule runs on either
+backend and the two are bit-identical; on a mesh the Pallas path runs under
+shard_map over the chunk-lane axis. ``use_kernels=True`` is the legacy
+spelling of ``backend="pallas"``.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import numpy as np
 
 from . import decode as D
 from ..dist import sharding as S
+from ..kernels.backend import check_backend, resolve_backend
 from .bitstream import BatchPlan, build_batch_plan
 from .state import DecodeState
 from .sync import SyncResult, faithful_sync, jacobi_sync, specmap_sync
@@ -53,6 +61,22 @@ def _decode_rules(mesh) -> Dict:
     return {"chunks": (axis,), "units": (axis,), "batch": (axis,)}
 
 
+def _lane_mesh_axis(trace_token):
+    """(mesh, axis) the chunk lanes are sharded over, from a trace token.
+
+    The token is :func:`repro.dist.sharding.trace_token`'s snapshot of the
+    ambient (mesh, rules) context — the same static jit key `_coeffs` is
+    cached on, so the shard_map mesh always matches the trace context.
+    """
+    if trace_token is None:
+        return None, None
+    mesh, rules = trace_token
+    for axis in dict(rules).get("chunks", ()):
+        if axis in mesh.shape and mesh.shape[axis] > 1:
+            return mesh, axis
+    return None, None
+
+
 @dataclasses.dataclass
 class DecodeOutput:
     coeffs: Array                       # (U_total, 64) zig-zag, absolute DC
@@ -72,43 +96,59 @@ class ParallelDecoder:
     """A compiled decoder for one batch *shape* (plan)."""
 
     def __init__(self, plan: BatchPlan, sync: str = "jacobi",
-                 idct_impl=None):
+                 idct_impl=None, backend: str = "jnp",
+                 interpret: Optional[bool] = None):
         assert sync in ("jacobi", "faithful", "sequential", "specmap")
+        check_backend(backend)
         self.plan = plan
         self.sync = sync
+        self.backend = backend
+        self.interpret = interpret
         self.dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        if idct_impl is None and backend == "pallas":
+            from ..kernels.idct.ops import idct_units
+            idct_impl = functools.partial(idct_units, interpret=interpret)
         self._idct_impl = idct_impl or D.idct_units_folded
         p = plan
 
         @functools.partial(jax.jit, static_argnums=(1,))
         def _coeffs(dev: Dict[str, Array], trace_token):
             # trace_token keys the jit cache on the ambient (mesh, rules)
-            # context that S.shard reads at trace time; unused in the body
-            del trace_token
+            # context that S.shard (and the Pallas shard_map path) reads at
+            # trace time
+            mesh, lane_axis = _lane_mesh_axis(trace_token)
             dev = _shard_lanes(dev)
+            if backend == "pallas":
+                from ..kernels.huffman import ops as HK
+                decode_exits = HK.make_decode_exits(
+                    s_max=p.s_max, min_code_bits=p.min_code_bits,
+                    chunk_bits=p.chunk_bits, interpret=interpret,
+                    mesh=mesh, lane_axis=lane_axis,
+                )
+            else:
+                decode_exits = D.make_decode_exits(
+                    s_max=p.s_max, min_code_bits=p.min_code_bits,
+                )
             if sync == "specmap":
                 from .bitstream import MAX_UPM
                 res = specmap_sync(
                     dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
                     max_upm=MAX_UPM, max_verify=p.n_chunks + 2,
+                    decode_exits=decode_exits,
                 )
             elif sync == "jacobi":
                 res = jacobi_sync(
                     dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
-                    max_rounds=p.n_chunks + 2,
+                    max_rounds=p.n_chunks + 2, decode_exits=decode_exits,
                 )
             elif sync == "faithful":
                 res = faithful_sync(
                     dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
                     seq_chunks=p.seq_chunks, max_outer=p.n_sequences + 2,
+                    decode_exits=decode_exits,
                 )
             else:  # sequential: one chunk per segment -> cold start is exact
-                meta = D.chunk_meta(dev)
-                exits, _ = D.decode_span(
-                    dev, DecodeState.cold(dev["chunk_start"]),
-                    meta["word_base"], meta["limit"], meta["ts"], meta["upm"],
-                    s_max=p.s_max, min_code_bits=p.min_code_bits,
-                )
+                exits = decode_exits(dev, DecodeState.cold(dev["chunk_start"]))
                 res = SyncResult(exits, jnp.asarray(1), jnp.asarray(True))
 
             # Output placement (Alg. 1 lines 7-8) + write pass (lines 9-15).
@@ -119,13 +159,22 @@ class ParallelDecoder:
             ])
             write_max = seg_end[dev["chunk_seg"]] - 1
             entries = _entries_from(dev, res.exits)
-            meta = D.chunk_meta(dev)
             out = jnp.zeros((p.total_units * 64,), jnp.int32)
-            _, out = D.decode_span(
-                dev, entries, meta["word_base"], meta["limit"], meta["ts"],
-                meta["upm"], s_max=p.s_max, min_code_bits=p.min_code_bits,
-                write=True, out=out, write_base=bases, write_max=write_max,
-            )
+            if backend == "pallas":
+                _, out = HK.decode_coeffs(
+                    dev, entries, out=out, write_base=bases,
+                    write_max=write_max, s_max=p.s_max,
+                    min_code_bits=p.min_code_bits, chunk_bits=p.chunk_bits,
+                    interpret=interpret, mesh=mesh, lane_axis=lane_axis,
+                )
+            else:
+                meta = D.chunk_meta(dev)
+                _, out = D.decode_span(
+                    dev, entries, meta["word_base"], meta["limit"],
+                    meta["ts"], meta["upm"], s_max=p.s_max,
+                    min_code_bits=p.min_code_bits, write=True, out=out,
+                    write_base=bases, write_max=write_max,
+                )
             coeffs = out.reshape(p.total_units, 64)
             coeffs = S.shard(D.undiff_dc(dev, coeffs), "units", None)
             return coeffs, res.rounds, res.converged
@@ -159,14 +208,16 @@ class ParallelDecoder:
     @classmethod
     def from_bytes(cls, blobs: Sequence[bytes], chunk_bits: int = 1024,
                    seq_chunks: int = 32, sync: str = "jacobi",
-                   idct_impl=None, use_kernels: bool = False) -> "ParallelDecoder":
-        if use_kernels and idct_impl is None:
-            from ..kernels.idct.ops import idct_units as idct_impl  # noqa: F811
+                   idct_impl=None, use_kernels: bool = False,
+                   backend: Optional[str] = None,
+                   interpret: Optional[bool] = None) -> "ParallelDecoder":
+        backend = resolve_backend(backend, use_kernels)
         if sync == "sequential":
             chunk_bits = _sequential_chunk_bits(blobs)
         plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
                                 seq_chunks=seq_chunks)
-        return cls(plan, sync=sync, idct_impl=idct_impl)
+        return cls(plan, sync=sync, idct_impl=idct_impl, backend=backend,
+                   interpret=interpret)
 
     # -- execution ------------------------------------------------------------
     def coefficients(self) -> DecodeOutput:
@@ -230,15 +281,22 @@ def decode_batch(
     sync: str = "jacobi",
     emit: str = "rgb",
     mesh=None,
+    backend: Optional[str] = None,
+    use_kernels: bool = False,
+    interpret: Optional[bool] = None,
 ) -> DecodeOutput:
     """One-shot convenience wrapper (builds the plan + compiles + decodes).
 
     With ``mesh``, the decode runs under ``dist.sharding.logical_rules``
     with the chunk lanes sharded over the data axis: one compiled program,
     work divided across every device in the mesh.
+
+    ``backend`` selects the decode implementation ("jnp" or "pallas" — see
+    the module docstring); the output is bit-identical either way.
     """
     dec = ParallelDecoder.from_bytes(
-        blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync
+        blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync,
+        backend=backend, use_kernels=use_kernels, interpret=interpret,
     )
     if mesh is None:
         return dec.decode(emit=emit)

@@ -164,6 +164,25 @@ def chunk_meta(dev: Dict[str, jnp.ndarray], idx: Optional[jnp.ndarray] = None):
     )
 
 
+def make_decode_exits(*, s_max: int, min_code_bits: int):
+    """Bind loop statics into the pluggable exit-decode protocol.
+
+    The returned ``fn(dev, entry, idx=None) -> DecodeState`` decodes every
+    chunk lane (or the ``idx`` subset) from its entry state to its chunk
+    end. The sync schedules (core/sync.py) are written against exactly
+    this signature, so the Pallas backend
+    (``repro.kernels.huffman.ops.make_decode_exits``) is a drop-in.
+    """
+    def fn(dev, entry, idx=None):
+        m = chunk_meta(dev, idx)
+        st, _ = decode_span(
+            dev, entry, m["word_base"], m["limit"], m["ts"], m["upm"],
+            s_max=s_max, min_code_bits=min_code_bits,
+        )
+        return st
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Output placement: segmented exclusive prefix sum over per-chunk n
 # ---------------------------------------------------------------------------

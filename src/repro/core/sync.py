@@ -18,16 +18,26 @@ Two schedules are implemented over the same decode primitive:
 
 Both return bit-identical exit states (asserted in tests); they differ only
 in schedule, which is the point of the beyond-paper comparison.
+
+Every schedule takes its decode primitive as a pluggable ``decode_exits``
+callable with signature ``fn(dev, entry, idx=None) -> DecodeState`` (see
+:func:`repro.core.decode.make_decode_exits`). ``None`` selects the pure-jnp
+reference; ``repro.kernels.huffman.ops.make_decode_exits`` supplies the
+Pallas kernel — the schedules are backend-agnostic and the two backends
+must agree bit-for-bit on every schedule (asserted in tests).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .decode import chunk_meta, decode_span
+from .decode import chunk_meta, make_decode_exits
 from .state import DecodeState
+
+# fn(dev, entry, idx=None) -> exit DecodeState for every lane (or subset)
+DecodeExitsFn = Callable[..., DecodeState]
 
 
 class SyncResult(NamedTuple):
@@ -78,19 +88,13 @@ def _scatter_where(
 
 def jacobi_sync(
     dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
-    max_rounds: int,
+    max_rounds: int, decode_exits: Optional[DecodeExitsFn] = None,
 ) -> SyncResult:
-    meta = chunk_meta(dev)
-
-    def full_decode(entry: DecodeState) -> DecodeState:
-        st, _ = decode_span(
-            dev, entry, meta["word_base"], meta["limit"], meta["ts"],
-            meta["upm"], s_max=s_max, min_code_bits=min_code_bits,
-        )
-        return st
+    if decode_exits is None:
+        decode_exits = make_decode_exits(s_max=s_max, min_code_bits=min_code_bits)
 
     cold = DecodeState.cold(dev["chunk_start"])
-    exit0 = full_decode(cold)  # the paper's initial speculative pass
+    exit0 = decode_exits(dev, cold)  # the paper's initial speculative pass
 
     def cond(carry):
         _, done, r = carry
@@ -98,7 +102,7 @@ def jacobi_sync(
 
     def body(carry):
         exits, _, r = carry
-        new = full_decode(chain_entries(dev, exits))
+        new = decode_exits(dev, chain_entries(dev, exits))
         return new, _states_equal(new, exits), r + 1
 
     exits, done, rounds = jax.lax.while_loop(
@@ -130,10 +134,12 @@ def jacobi_sync(
 def specmap_sync(
     dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
     max_upm: int, max_verify: int,
+    decode_exits: Optional[DecodeExitsFn] = None,
 ) -> SyncResult:
+    if decode_exits is None:
+        decode_exits = make_decode_exits(s_max=s_max, min_code_bits=min_code_bits)
     C = dev["chunk_seg"].shape[0]
-    meta = chunk_meta(dev)
-    upm = meta["upm"]
+    upm = chunk_meta(dev)["upm"]
 
     # --- one decode per (chunk, phase hypothesis): upm*C lanes -------------
     def decode_hyp(u0):
@@ -143,10 +149,7 @@ def specmap_sync(
             z=jnp.zeros((C,), jnp.int32),
             n=jnp.zeros((C,), jnp.int32),
         )
-        st, _ = decode_span(dev, entry, meta["word_base"], meta["limit"],
-                            meta["ts"], meta["upm"], s_max=s_max,
-                            min_code_bits=min_code_bits)
-        return st
+        return decode_exits(dev, entry)
 
     hyp = [decode_hyp(u0) for u0 in range(max_upm)]
     # exits per hypothesis: (H, C)
@@ -156,12 +159,9 @@ def specmap_sync(
     en = jnp.stack([h.n for h in hyp])
 
     # --- compose phase maps with an associative scan ------------------------
-    # element i: map m_i[h] = exit-u of chunk i entered with phase h, plus a
-    # validity flag (chunk boundary-starts a segment => identity re-anchor).
+    # element i: map m_i[h] = exit-u of chunk i entered with phase h.
     first = dev["chunk_first"]
     maps = eu  # (H, C) int32
-    idem = jnp.broadcast_to(jnp.arange(max_upm, dtype=jnp.int32)[:, None],
-                            (max_upm, C))
     # segment-first chunks re-anchor: their true entry phase is 0 regardless
     # of the prefix, so their map is constant m[h] = exit-u of hypothesis 0.
     maps = jnp.where(first[None, :], jnp.broadcast_to(eu[0:1], eu.shape), maps)
@@ -182,19 +182,13 @@ def specmap_sync(
 
     # --- verification to the exact fixed point (repairs rare bit-phase
     #     failures; counts as rounds like every other schedule) -------------
-    def full_decode(entry: DecodeState) -> DecodeState:
-        st, _ = decode_span(dev, entry, meta["word_base"], meta["limit"],
-                            meta["ts"], meta["upm"], s_max=s_max,
-                            min_code_bits=min_code_bits)
-        return st
-
     def cond(carry):
         _, done, r = carry
         return (~done) & (r < max_verify)
 
     def body(carry):
         ex, _, r = carry
-        new = full_decode(chain_entries(dev, ex))
+        new = decode_exits(dev, chain_entries(dev, ex))
         return new, _states_equal(new, ex), r + 1
 
     exits, done, rounds = jax.lax.while_loop(
@@ -209,6 +203,7 @@ def specmap_sync(
 def faithful_sync(
     dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
     seq_chunks: int, max_outer: int, verify: bool = True,
+    decode_exits: Optional[DecodeExitsFn] = None,
 ) -> SyncResult:
     """Paper Algorithm 3, plus an optional verification fixed-point pass.
 
@@ -221,24 +216,17 @@ def faithful_sync(
     — which guarantees the exact sequential parse. Set ``verify=False`` to
     benchmark the paper's raw schedule.
     """
+    if decode_exits is None:
+        decode_exits = make_decode_exits(s_max=s_max, min_code_bits=min_code_bits)
     C = dev["chunk_seg"].shape[0]
     idx = jnp.arange(C, dtype=jnp.int32)
-    meta_all = chunk_meta(dev)
 
     def decode_at(targets: jnp.ndarray, entry: DecodeState) -> DecodeState:
-        m = chunk_meta(dev, targets)
-        st, _ = decode_span(
-            dev, entry, m["word_base"], m["limit"], m["ts"], m["upm"],
-            s_max=s_max, min_code_bits=min_code_bits,
-        )
-        return st
+        return decode_exits(dev, entry, targets)
 
     # ---- Phase 0: speculative cold decode of every subsequence ------------
     cold = DecodeState.cold(dev["chunk_start"])
-    s_info, _ = decode_span(
-        dev, cold, meta_all["word_base"], meta_all["limit"], meta_all["ts"],
-        meta_all["upm"], s_max=s_max, min_code_bits=min_code_bits,
-    )
+    s_info = decode_exits(dev, cold)
     rounds = jnp.asarray(1)
 
     # ---- Phase 1: intra-sequence chains (lockstep rounds) ------------------
@@ -269,7 +257,6 @@ def faithful_sync(
 
     # ---- Phase 2: inter-sequence chains, outer host loop --------------------
     roots = dev["seq_last_chunk"]
-    Q = roots.shape[0]
     root_seq = dev["chunk_seq"][roots]
     root_seg = dev["chunk_seg"][roots]
     next_chunk = jnp.clip(roots + 1, 0, C - 1)
@@ -325,21 +312,13 @@ def faithful_sync(
         return SyncResult(s_info, rounds, jnp.all(seq_synced))
 
     # ---- Verification: run the chain recurrence to its true fixed point ----
-    def full_decode(entry: DecodeState) -> DecodeState:
-        st, _ = decode_span(
-            dev, entry, meta_all["word_base"], meta_all["limit"],
-            meta_all["ts"], meta_all["upm"], s_max=s_max,
-            min_code_bits=min_code_bits,
-        )
-        return st
-
     def v_cond(carry):
         _, done, r = carry
         return (~done) & (r < rounds + C + 2)
 
     def v_body(carry):
         exits, _, r = carry
-        new = full_decode(chain_entries(dev, exits))
+        new = decode_exits(dev, chain_entries(dev, exits))
         return new, _states_equal(new, exits), r + 1
 
     s_info, done, rounds = jax.lax.while_loop(

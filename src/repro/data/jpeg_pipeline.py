@@ -14,7 +14,9 @@ framing); pixels never exist host-side.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -42,12 +44,14 @@ class JpegVisionPipeline:
 
     def __init__(self, patch: int = 16, embed_dim: int = 1024,
                  chunk_bits: int = 1024, sync: str = "jacobi",
-                 use_kernels: bool = False, seed: int = 0, mesh=None):
+                 use_kernels: bool = False, backend: Optional[str] = None,
+                 seed: int = 0, mesh=None, decoder_cache_size: int = 16):
         self.patch = patch
         self.embed_dim = embed_dim
         self.chunk_bits = chunk_bits
         self.sync = sync
         self.use_kernels = use_kernels
+        self.backend = backend
         # with a mesh, decode work (chunk lanes / output units) is sharded
         # over the data axis — the input pipeline scales with the job
         self.mesh = mesh
@@ -56,15 +60,42 @@ class JpegVisionPipeline:
         self.w_embed = jnp.asarray(
             rng.normal(0, 0.02, (patch * patch * 3, embed_dim)),
             dtype=jnp.bfloat16)
-        self._decoders: Dict = {}
+        # LRU: each entry pins the batch's device words + a compiled
+        # decoder, so an unbounded content-keyed cache would grow with
+        # every distinct batch a training stream produces
+        if decoder_cache_size < 0:
+            raise ValueError(
+                f"decoder_cache_size must be >= 0 (0 disables caching), "
+                f"got {decoder_cache_size}")
+        self._decoder_cache_size = decoder_cache_size
+        self._decoders: Dict = collections.OrderedDict()
+
+    @staticmethod
+    def _batch_key(blobs: Sequence[bytes]) -> bytes:
+        """Content digest of a batch. A compiled decoder bakes the batch's
+        device words into `dec.dev`, so the cache key must identify the
+        *bytes*, not just the shape — keying on (count, total_bytes) made
+        two different same-size batches silently reuse the first batch's
+        bitstream and decode the wrong images."""
+        h = hashlib.blake2b(digest_size=16)
+        for b in blobs:
+            h.update(len(b).to_bytes(8, "little"))
+            h.update(b)
+        return h.digest()
 
     def _decoder(self, blobs: Sequence[bytes]) -> ParallelDecoder:
-        key = (len(blobs), sum(len(b) for b in blobs))
-        if key not in self._decoders:
-            self._decoders[key] = ParallelDecoder.from_bytes(
+        key = self._batch_key(blobs)
+        dec = self._decoders.get(key)
+        if dec is None:
+            dec = ParallelDecoder.from_bytes(
                 list(blobs), chunk_bits=self.chunk_bits, sync=self.sync,
-                use_kernels=self.use_kernels)
-        return self._decoders[key]
+                use_kernels=self.use_kernels, backend=self.backend)
+            self._decoders[key] = dec
+            while len(self._decoders) > self._decoder_cache_size:
+                self._decoders.popitem(last=False)
+        else:
+            self._decoders.move_to_end(key)
+        return dec
 
     def patches_for(self, blobs: Sequence[bytes]):
         """(B, n_patches, embed_dim) patch tokens + stats."""

@@ -1,0 +1,69 @@
+"""Shared kernel-backend selection for every Pallas wrapper.
+
+Two orthogonal knobs, used across ``kernels/`` and threaded through the
+decoder API (``core/api.py``):
+
+* ``backend`` — which implementation family executes the hot path:
+  ``"jnp"`` (pure-JAX reference decoder) or ``"pallas"`` (the kernels in
+  this package). Unknown names raise immediately; a silent fallback is
+  exactly the bug this module exists to prevent (``use_kernels=True``
+  historically swapped only the IDCT and dropped the Huffman kernel on
+  the floor).
+
+* ``interpret`` — whether a Pallas call runs compiled (Mosaic on TPU,
+  Triton on GPU) or through the interpreter. The wrappers used to
+  hardcode ``interpret=True``, which pinned every deployment to the
+  interpreter: compiled Pallas never ran off-CPU. Resolution order:
+
+    1. an explicit ``interpret=`` argument (tests force interpret mode),
+    2. the ``REPRO_PALLAS_INTERPRET`` env var (``"1"``/``"0"``),
+    3. platform default: interpret on CPU (the only backend the
+       interpreter-free path cannot target), compiled on TPU/GPU.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+BACKENDS = ("jnp", "pallas")
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def check_backend(backend: str) -> str:
+    """Validate a decode-backend name; raise (never coerce) on junk."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown decode backend {backend!r}; expected one of {BACKENDS}"
+        )
+    return backend
+
+
+def resolve_backend(backend: Optional[str], use_kernels: bool = False) -> str:
+    """Map the (backend, legacy use_kernels) pair to a validated backend."""
+    if backend is None:
+        return "pallas" if use_kernels else "jnp"
+    backend = check_backend(backend)
+    if use_kernels and backend != "pallas":
+        raise ValueError(
+            f"conflicting backend selection: use_kernels=True with "
+            f"backend={backend!r} would silently drop the kernels; pass "
+            f"one or the other"
+        )
+    return backend
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve the effective ``interpret`` flag for a Pallas call."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        if env not in ("0", "1"):
+            raise ValueError(
+                f"{INTERPRET_ENV} must be '0' or '1', got {env!r}"
+            )
+        return env == "1"
+    return jax.default_backend() == "cpu"

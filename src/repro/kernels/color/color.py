@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..backend import default_interpret
+
 TILE_H = 8
 TILE_W = 256
 
@@ -47,8 +49,9 @@ def upsample_color(
     cr: jnp.ndarray,
     fh: int = 1,
     fv: int = 1,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
+    interpret = default_interpret(interpret)
     b, h, w = y.shape
     ph = (-h) % TILE_H
     pw = (-w) % TILE_W

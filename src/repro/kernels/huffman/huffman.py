@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: LUT-driven JPEG subsequence decoding.
+"""Pallas TPU kernels: LUT-driven JPEG subsequence decoding.
 
 One lane per subsequence (chunk). The CUDA original runs a divergent
 per-thread bit loop; the TPU-native shape (DESIGN.md §3) is a lane-
@@ -11,17 +11,32 @@ vectorized loop with three primitives per symbol:
      distinct Huffman table — the dominant VMEM tenant),
   3. integer state update (p, u, z, n) under an activity mask.
 
+Two kernels share the symbol step:
+
+* :func:`decode_exits_pallas` — the sync-phase decode: exit states only
+  (paper Algorithm 2 / the inner loop of Algorithm 3).
+* :func:`decode_coeffs_pallas` — the write pass (Algorithm 1 lines 9–15):
+  the same loop additionally emits, per lane and per symbol step, the
+  local zig-zag write offset and the decoded coefficient. The global
+  scatter (write_base + offset) stays outside the kernel as one bulk
+  jnp scatter: lanes own disjoint output ranges once entries have
+  converged, so scatter order is irrelevant, and a regular (C, s_max)
+  tile keeps the kernel free of data-dependent HBM stores.
+
 VMEM per grid step (TILE_C=1024 lanes, 1024-bit chunks, 4 LUTs):
   words  (1024, 34) u32 ~ 136 KiB
   luts   4*65536    i32 = 1  MiB
   rows   (1024, 12) i32 ~ 48 KiB
   states 6*(1024,)  i32 ~ 24 KiB          total ~1.2 MiB << 16 MiB VMEM.
+The write kernel adds 2*(TILE, s_max) i32 output tiles, so it runs with
+a smaller lane tile (WRITE_TILE_C) to stay inside the same budget.
 
 TPU lowering note: the LUT lookup and the per-lane word fetch are dynamic
 VMEM gathers (Mosaic `vector.gather`); supported on v4+/v5 — on older
 toolchains the word fetch can fall back to a masked O(W) reduction. The
-kernel body is validated in interpret mode against the pure-jnp decoder
-(itself bit-exact vs the sequential oracle).
+kernel bodies are validated in interpret mode against the pure-jnp decoder
+(itself bit-exact vs the sequential oracle). Backend selection (compiled
+vs interpret) lives in ``repro.kernels.backend``.
 """
 from __future__ import annotations
 
@@ -32,77 +47,161 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ...jpeg import tables as T
+from ..backend import default_interpret
 
 TILE_C = 1024
+WRITE_TILE_C = 256
 U32 = jnp.uint32
 
 
-def _kernel(
-    words_ref,    # (TILE_C, W) uint32 per-lane word windows
+def _symbol_step(words, lanes, luts_ref, rows_ref, limit, upm, min_code_bits,
+                 carry):
+    """One Huffman symbol per lane: the shared body of both kernels.
+
+    Returns the updated (p, u, z, n) carry plus the per-step outputs the
+    write pass needs (coefficient, effective run, activity/validity).
+    """
+    p, u, z, n = carry
+    active = p < limit
+
+    w = p >> 5
+    off = (p & 31).astype(U32)
+    hi = words[lanes, w]
+    lo = words[lanes, w + 1]
+    lo_shift = jnp.where(off == 0, U32(0), lo >> ((U32(32) - off) & U32(31)))
+    win32 = (hi << off) | lo_shift
+    win16 = (win32 >> U32(16)).astype(jnp.int32)
+
+    is_dc = (z == 0).astype(jnp.int32)
+    row = rows_ref[lanes, u * 2 + is_dc]
+    entry = luts_ref[row * 65536 + win16]
+
+    clen = entry & 0x1F
+    size = (entry >> T.LUT_SIZE_SHIFT) & 0xF
+    run = (entry >> T.LUT_RUN_SHIFT) & 0xF
+    eob = (entry & T.LUT_EOB_BIT) != 0
+    invalid = clen == 0
+
+    # magnitude bits: the `size` bits following the codeword
+    shift = (U32(32) - clen.astype(U32) - size.astype(U32)) & U32(31)
+    mask = (U32(1) << size.astype(U32)) - U32(1)
+    vbits = ((win32 >> shift) & mask).astype(jnp.int32)
+    half = jnp.left_shift(jnp.int32(1), jnp.maximum(size - 1, 0))
+    full = jnp.left_shift(jnp.int32(1), size)
+    coef = jnp.where(vbits < half, vbits - full + 1, vbits)
+    coef = jnp.where(size == 0, 0, coef)
+
+    run_eff = jnp.where(eob, 63 - z, run)
+    run_eff = jnp.where(invalid, 0, run_eff)
+    zstep = run_eff + 1
+    adv = jnp.where(invalid, min_code_bits, clen + size)
+
+    new_z = z + zstep
+    blk = new_z >= 64
+    z_n = jnp.where(blk, 0, new_z)
+    u_n = jnp.where(blk, jnp.where(u + 1 >= upm, 0, u + 1), u)
+    nxt = (
+        jnp.where(active, p + adv, p),
+        jnp.where(active, u_n, u),
+        jnp.where(active, z_n, z),
+        jnp.where(active, n + zstep, n),
+    )
+    return nxt, coef, run_eff, active, invalid
+
+
+def _lane_inputs(words_ref, meta_ref, upm_ref):
+    words = words_ref[...]
+    lanes = jnp.arange(words.shape[0], dtype=jnp.int32)
+    carry0 = (meta_ref[:, 0], meta_ref[:, 1], meta_ref[:, 2],
+              jnp.zeros_like(meta_ref[:, 0]))
+    return words, lanes, carry0, meta_ref[:, 3], upm_ref[:, 0]
+
+
+def _exits_kernel(
+    words_ref,    # (TILE, W) uint32 per-lane word windows
     luts_ref,     # (L * 65536,) int32 flattened decode LUTs
-    rows_ref,     # (TILE_C, 2*MAX_UPM) int32 LUT row per (u, is_dc)
-    meta_ref,     # (TILE_C, 4) int32: [p_entry, u_entry, z_entry, limit_local]
-    upm_ref,      # (TILE_C, 1) int32
-    out_ref,      # (TILE_C, 4) int32: exit [p, u, z, n] (p local to chunk)
+    rows_ref,     # (TILE, 2*MAX_UPM) int32 LUT row per (u, is_dc)
+    meta_ref,     # (TILE, 4) int32: [p_entry, u_entry, z_entry, limit_local]
+    upm_ref,      # (TILE, 1) int32
+    out_ref,      # (TILE, 4) int32: exit [p, u, z, n] (p local to chunk)
     *,
     s_max: int,
     min_code_bits: int,
-    max_upm: int,
 ):
-    words = words_ref[...]
-    lanes = jnp.arange(words.shape[0], dtype=jnp.int32)
-    p0 = meta_ref[:, 0]
-    u0 = meta_ref[:, 1]
-    z0 = meta_ref[:, 2]
-    limit = meta_ref[:, 3]
-    upm = upm_ref[:, 0]
-
-    def fetch32(p):
-        w = p >> 5
-        off = (p & 31).astype(U32)
-        hi = words[lanes, w]
-        lo = words[lanes, w + 1]
-        lo_shift = jnp.where(off == 0, U32(0), lo >> ((U32(32) - off) & U32(31)))
-        return (hi << off) | lo_shift
+    words, lanes, carry0, limit, upm = _lane_inputs(words_ref, meta_ref, upm_ref)
 
     def body(_, carry):
-        p, u, z, n = carry
-        active = p < limit
-        win32 = fetch32(p)
-        win16 = (win32 >> U32(16)).astype(jnp.int32)
-        is_dc = (z == 0).astype(jnp.int32)
-        row = rows_ref[lanes, u * 2 + is_dc]
-        entry = luts_ref[row * 65536 + win16]
-
-        clen = entry & 0x1F
-        size = (entry >> T.LUT_SIZE_SHIFT) & 0xF
-        run = (entry >> T.LUT_RUN_SHIFT) & 0xF
-        eob = (entry & T.LUT_EOB_BIT) != 0
-        invalid = clen == 0
-
-        run_eff = jnp.where(eob, 63 - z, run)
-        run_eff = jnp.where(invalid, 0, run_eff)
-        zstep = run_eff + 1
-        adv = jnp.where(invalid, min_code_bits, clen + size)
-
-        new_z = z + zstep
-        blk = new_z >= 64
-        z_n = jnp.where(blk, 0, new_z)
-        u_n = jnp.where(blk, jnp.where(u + 1 >= upm, 0, u + 1), u)
-        return (
-            jnp.where(active, p + adv, p),
-            jnp.where(active, u_n, u),
-            jnp.where(active, z_n, z),
-            jnp.where(active, n + zstep, n),
+        nxt, _, _, _, _ = _symbol_step(
+            words, lanes, luts_ref, rows_ref, limit, upm, min_code_bits, carry
         )
+        return nxt
 
-    p, u, z, n = jax.lax.fori_loop(
-        0, s_max, body, (p0, u0, z0, jnp.zeros_like(p0))
-    )
+    p, u, z, n = jax.lax.fori_loop(0, s_max, body, carry0)
     out_ref[:, 0] = p
     out_ref[:, 1] = u
     out_ref[:, 2] = z
     out_ref[:, 3] = n
+
+
+def _write_kernel(
+    words_ref, luts_ref, rows_ref, meta_ref, upm_ref,
+    out_ref,      # (TILE, 4) int32 exit states (as in _exits_kernel)
+    pos_ref,      # (TILE, s_max) int32 local zig-zag write offset, -1 = none
+    val_ref,      # (TILE, s_max) int32 decoded coefficient
+    *,
+    s_max: int,
+    min_code_bits: int,
+):
+    words, lanes, carry0, limit, upm = _lane_inputs(words_ref, meta_ref, upm_ref)
+
+    def body(i, carry):
+        nxt, coef, run_eff, active, invalid = _symbol_step(
+            words, lanes, luts_ref, rows_ref, limit, upm, min_code_bits, carry
+        )
+        n = carry[3]
+        rec = active & ~invalid
+        pos = jnp.where(rec, n + run_eff, -1)
+        pl.store(pos_ref, (slice(None), pl.ds(i, 1)), pos[:, None])
+        pl.store(val_ref, (slice(None), pl.ds(i, 1)), coef[:, None])
+        return nxt
+
+    p, u, z, n = jax.lax.fori_loop(0, s_max, body, carry0)
+    out_ref[:, 0] = p
+    out_ref[:, 1] = u
+    out_ref[:, 2] = z
+    out_ref[:, 3] = n
+
+
+def _prep_lanes(words, word_base, chunk_start, entry_p, entry_u, entry_z,
+                limit, upm, chunk_words, tile):
+    """Pre-gather per-lane word windows + pack per-lane metadata, tile-padded."""
+    c = entry_p.shape[0]
+    w = chunk_words + 2  # +1 straddle word, +1 safety
+
+    # Pre-gather each chunk's word window: (C, W). Chunks are 32-bit aligned.
+    first_word = word_base + (chunk_start >> 5)
+    gidx = first_word[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    gidx = jnp.minimum(gidx, words.shape[0] - 1)
+    local_words = words[gidx]
+
+    pad = (-c) % tile
+
+    def padc(a, v=0):
+        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                       constant_values=v)
+
+    meta = jnp.stack(
+        [entry_p - chunk_start, entry_u, entry_z, limit - chunk_start], axis=1
+    )
+    # padding lanes get limit_local = 0 <= p = 0, i.e. never active
+    return padc(local_words), padc(meta), padc(
+        jnp.maximum(upm, 1)[:, None], v=1), pad, w
+
+
+def _tile_for(c: int, cap: int) -> int:
+    """Lane tile: cap for big batches, an 8-multiple cover for small ones
+    (keeps sublane alignment without padding a 3-chunk batch to 1024)."""
+    return min(cap, -(-c // 8) * 8)
 
 
 @functools.partial(
@@ -123,47 +222,34 @@ def decode_exits_pallas(
     s_max: int,
     min_code_bits: int,
     chunk_words: int,
-    interpret: bool = True,
+    interpret: bool,
 ):
     """Returns exit (p, u, z, n); p is segment-relative like the input."""
     c = entry_p.shape[0]
-    w = chunk_words + 2  # +1 straddle word, +1 safety
-
-    # Pre-gather each chunk's word window: (C, W). Chunks are 32-bit aligned.
-    first_word = word_base + (chunk_start >> 5)
-    gidx = first_word[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
-    gidx = jnp.minimum(gidx, words.shape[0] - 1)
-    local_words = words[gidx]
-
-    pad = (-c) % TILE_C
-    def padc(a, v=0):
-        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=v)
-
-    local_words = padc(local_words)
-    meta = jnp.stack(
-        [entry_p - chunk_start, entry_u, entry_z, limit - chunk_start], axis=1
+    tile = _tile_for(c, TILE_C)
+    local_words, meta, upm2, pad, w = _prep_lanes(
+        words, word_base, chunk_start, entry_p, entry_u, entry_z, limit, upm,
+        chunk_words, tile,
     )
-    meta = padc(meta)
-    rows = padc(lut_rows.reshape(c, -1))
-    upm2 = padc(jnp.maximum(upm, 1)[:, None], v=1)
+    rows = jnp.pad(lut_rows.reshape(c, -1), ((0, pad), (0, 0)))
 
-    n_tiles = (c + pad) // TILE_C
+    n_tiles = (c + pad) // tile
     max_upm = lut_rows.shape[1]
     out = pl.pallas_call(
         functools.partial(
-            _kernel, s_max=s_max, min_code_bits=min_code_bits, max_upm=max_upm
+            _exits_kernel, s_max=s_max, min_code_bits=min_code_bits
         ),
         grid=(n_tiles,),
         in_specs=[
-            pl.BlockSpec((TILE_C, w), lambda i: (i, 0)),
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
             pl.BlockSpec((luts.size,), lambda i: (0,)),
-            pl.BlockSpec((TILE_C, 2 * max_upm), lambda i: (i, 0)),
-            pl.BlockSpec((TILE_C, 4), lambda i: (i, 0)),
-            pl.BlockSpec((TILE_C, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 2 * max_upm), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_C, 4), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((c + pad, 4), jnp.int32),
-        interpret=interpret,
+        interpret=default_interpret(interpret),
     )(local_words, luts.reshape(-1), rows, meta, upm2)
 
     out = out[:c]
@@ -172,4 +258,73 @@ def decode_exits_pallas(
         out[:, 1],
         out[:, 2],
         out[:, 3],
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s_max", "min_code_bits", "chunk_words", "interpret")
+)
+def decode_coeffs_pallas(
+    words: jnp.ndarray,
+    luts: jnp.ndarray,
+    lut_rows: jnp.ndarray,
+    word_base: jnp.ndarray,
+    chunk_start: jnp.ndarray,
+    entry_p: jnp.ndarray,
+    entry_u: jnp.ndarray,
+    entry_z: jnp.ndarray,
+    limit: jnp.ndarray,
+    upm: jnp.ndarray,
+    *,
+    s_max: int,
+    min_code_bits: int,
+    chunk_words: int,
+    interpret: bool,
+):
+    """Write pass: exits plus per-symbol (local offset, coefficient) streams.
+
+    ``pos[c, s]`` is the zig-zag offset (relative to the lane's write base)
+    written by symbol step ``s`` of lane ``c``, or -1 when the step decoded
+    nothing (inactive past the chunk end, or garbage phase).
+    """
+    c = entry_p.shape[0]
+    tile = _tile_for(c, WRITE_TILE_C)
+    local_words, meta, upm2, pad, w = _prep_lanes(
+        words, word_base, chunk_start, entry_p, entry_u, entry_z, limit, upm,
+        chunk_words, tile,
+    )
+    rows = jnp.pad(lut_rows.reshape(c, -1), ((0, pad), (0, 0)))
+
+    n_tiles = (c + pad) // tile
+    max_upm = lut_rows.shape[1]
+    exits, pos, val = pl.pallas_call(
+        functools.partial(
+            _write_kernel, s_max=s_max, min_code_bits=min_code_bits
+        ),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+            pl.BlockSpec((luts.size,), lambda i: (0,)),
+            pl.BlockSpec((tile, 2 * max_upm), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile, s_max), lambda i: (i, 0)),
+            pl.BlockSpec((tile, s_max), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c + pad, 4), jnp.int32),
+            jax.ShapeDtypeStruct((c + pad, s_max), jnp.int32),
+            jax.ShapeDtypeStruct((c + pad, s_max), jnp.int32),
+        ],
+        interpret=default_interpret(interpret),
+    )(local_words, luts.reshape(-1), rows, meta, upm2)
+
+    exits = exits[:c]
+    return (
+        (exits[:, 0] + chunk_start, exits[:, 1], exits[:, 2], exits[:, 3]),
+        pos[:c],
+        val[:c],
     )

@@ -1,41 +1,163 @@
-"""Jitted wrapper integrating the Pallas subsequence decoder with the core
-decoder's data layout (drop-in for the sync-phase decode_span)."""
+"""Jitted wrappers integrating the Pallas subsequence decoder with the core
+decoder's data layout.
+
+:func:`decode_exits` is a drop-in for the sync-phase ``decode_span`` and
+implements the pluggable decode protocol of ``core/sync.py``: it accepts an
+optional chunk-index subset (``idx``) so ``faithful_sync``'s per-chain
+``decode_at`` gathers run in the kernel too. :func:`decode_coeffs` is the
+write pass (paper Algorithm 1 lines 9–15): the kernel emits per-symbol
+(offset, coefficient) streams and one bulk jnp scatter places them.
+
+On a mesh the wrappers run the kernel under ``shard_map`` over the
+chunk-lane axis: per-lane operands are split across devices (padded to a
+multiple of the axis size with inert lanes), the word buffer and LUTs are
+replicated, and each device runs the identical Pallas program on its lane
+shard — the kernel equivalent of the GSPMD-sharded jnp hot path.
+"""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from ...core.decode import chunk_meta
 from ...core.state import DecodeState
-from .huffman import decode_exits_pallas
+from ..backend import default_interpret
+from .huffman import decode_coeffs_pallas, decode_exits_pallas
 from .ref import decode_exits_ref  # noqa: F401  (re-exported oracle)
+
+
+def _shard_map():
+    try:  # jax >= 0.5
+        from jax import shard_map
+        return shard_map, {"check_vma": False}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map, {"check_rep": False}
+
+
+def _lane_meta(dev: Dict[str, jnp.ndarray], idx) -> Tuple[jnp.ndarray, ...]:
+    """Per-lane kernel operands, optionally gathered at a chunk subset."""
+    m = chunk_meta(dev, idx)
+    start = dev["chunk_start"] if idx is None else dev["chunk_start"][idx]
+    return (
+        dev["unit_lut_row"][m["ts"]],  # (C, MAX_UPM, 2)
+        m["word_base"],                # (C,)
+        start,                         # (C,)
+    ), m["limit"], m["upm"]
+
+
+def _run(fn, dev, entry, idx, kw, mesh, lane_axis, out_specs_fn):
+    """Invoke a lane kernel, via shard_map over `lane_axis` when on a mesh."""
+    (lut_rows, word_base, start), limit, upm = _lane_meta(dev, idx)
+    lane_args = (lut_rows, word_base, start, entry.p, entry.u, entry.z,
+                 limit, upm)
+    if mesh is None or lane_axis is None or mesh.shape[lane_axis] <= 1:
+        return fn(dev["words"], dev["luts"], *lane_args, **kw), None
+
+    n_dev = mesh.shape[lane_axis]
+    c = entry.p.shape[0]
+    pad = (-c) % n_dev
+
+    def padl(a):
+        # padding lanes are inert: p=0, limit=0 -> never active in-kernel
+        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+    padded = tuple(padl(a) for a in lane_args)
+    lane_specs = tuple(
+        P(lane_axis, *([None] * (a.ndim - 1))) for a in padded
+    )
+    sm, sm_kw = _shard_map()
+    f = sm(
+        lambda words, luts, *la: fn(words, luts, *la, **kw),
+        mesh=mesh,
+        in_specs=(P(), P()) + lane_specs,
+        out_specs=out_specs_fn(lane_axis),
+        **sm_kw,
+    )
+    return f(dev["words"], dev["luts"], *padded), c
 
 
 def decode_exits(
     dev: Dict[str, jnp.ndarray],
     entry: DecodeState,
+    idx: Optional[jnp.ndarray] = None,
     *,
     s_max: int,
     min_code_bits: int,
     chunk_bits: int,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    mesh=None,
+    lane_axis: Optional[str] = None,
 ) -> DecodeState:
-    seg = dev["chunk_seg"]
-    ts = dev["seg_tableset"][seg]
-    p, u, z, n = decode_exits_pallas(
-        dev["words"],
-        dev["luts"],
-        dev["unit_lut_row"][ts],
-        dev["seg_word_base"][seg],
-        dev["chunk_start"],
-        entry.p,
-        entry.u,
-        entry.z,
-        dev["chunk_limit"],
-        dev["ts_upm"][ts],
-        s_max=s_max,
-        min_code_bits=min_code_bits,
-        chunk_words=chunk_bits // 32,
-        interpret=interpret,
+    """Exit states for every lane (or the `idx` subset) — sync-phase decode."""
+    kw = dict(s_max=s_max, min_code_bits=min_code_bits,
+              chunk_words=chunk_bits // 32,
+              interpret=default_interpret(interpret))
+    (p, u, z, n), c = _run(
+        decode_exits_pallas, dev, entry, idx, kw, mesh, lane_axis,
+        lambda ax: (P(ax),) * 4,
     )
+    if c is not None:  # un-pad the shard_map path
+        p, u, z, n = p[:c], u[:c], z[:c], n[:c]
     return DecodeState(p, u, z, n)
+
+
+def decode_coeffs(
+    dev: Dict[str, jnp.ndarray],
+    entry: DecodeState,
+    *,
+    out: jnp.ndarray,          # (total_units*64,) int32 zero-initialized
+    write_base: jnp.ndarray,   # (C,) absolute dense-coefficient base per lane
+    write_max: jnp.ndarray,    # (C,) inclusive per-lane clamp (segment end)
+    s_max: int,
+    min_code_bits: int,
+    chunk_bits: int,
+    interpret: Optional[bool] = None,
+    mesh=None,
+    lane_axis: Optional[str] = None,
+) -> Tuple[DecodeState, jnp.ndarray]:
+    """Write pass: decode every lane from `entry` and scatter coefficients.
+
+    The kernel produces per-lane (offset, value) streams; with converged
+    entries each lane owns a disjoint output range, so the trailing bulk
+    scatter is order-independent and bit-identical to the sequential
+    per-symbol scatter of the jnp path.
+    """
+    kw = dict(s_max=s_max, min_code_bits=min_code_bits,
+              chunk_words=chunk_bits // 32,
+              interpret=default_interpret(interpret))
+    ((p, u, z, n), pos, val), c = _run(
+        decode_coeffs_pallas, dev, entry, None, kw, mesh, lane_axis,
+        lambda ax: ((P(ax),) * 4, P(ax, None), P(ax, None)),
+    )
+    if c is not None:
+        p, u, z, n = p[:c], u[:c], z[:c], n[:c]
+        pos, val = pos[:c], val[:c]
+    tgt = write_base[:, None] + pos
+    ok = (pos >= 0) & (tgt <= write_max[:, None])
+    # NB: sentinel must be past-the-end, not -1 (negative indices wrap).
+    tgt = jnp.where(ok, tgt, out.shape[0])
+    out = out.at[tgt.reshape(-1)].set(val.reshape(-1), mode="drop")
+    return DecodeState(p, u, z, n), out
+
+
+def make_decode_exits(
+    *,
+    s_max: int,
+    min_code_bits: int,
+    chunk_bits: int,
+    interpret: Optional[bool] = None,
+    mesh=None,
+    lane_axis: Optional[str] = None,
+):
+    """Bind plan statics into the ``decode_exits(dev, entry, idx)`` protocol
+    consumed by the sync schedules (core/sync.py)."""
+    def fn(dev, entry, idx=None):
+        return decode_exits(
+            dev, entry, idx, s_max=s_max, min_code_bits=min_code_bits,
+            chunk_bits=chunk_bits, interpret=interpret, mesh=mesh,
+            lane_axis=lane_axis,
+        )
+    return fn

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..backend import default_interpret
+
 TILE_U = 512  # units per grid step; multiple of 8*2 (sublane x pairing)
 
 
@@ -48,8 +50,9 @@ def fused_idct(
     coeffs: jnp.ndarray,      # (U, 64) int32/float zig-zag coefficients
     m_matrices: jnp.ndarray,  # (NQ, 64, 64) float32 folded operators
     unit_mrow: jnp.ndarray,   # (U,) int32
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
+    interpret = default_interpret(interpret)
     u, _ = coeffs.shape
     nq = m_matrices.shape[0]
     # block-diagonalize each M for the unit-pairing trick

@@ -2,13 +2,19 @@
 repro.core.decode.idct_units_folded)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from ..backend import default_interpret
 from .idct import fused_idct
 from .ref import fused_idct_ref  # noqa: F401  (re-exported oracle)
 
 
 def idct_units(coeffs: jnp.ndarray, m_matrices: jnp.ndarray,
-               unit_mrow: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
-    """Fused dequant+dezigzag+IDCT; Pallas on TPU, interpret mode on CPU."""
-    return fused_idct(coeffs, m_matrices, unit_mrow, interpret=interpret)
+               unit_mrow: jnp.ndarray, *,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused dequant+dezigzag+IDCT; compiled Pallas on TPU/GPU, interpret
+    mode on CPU (see repro.kernels.backend for the override order)."""
+    return fused_idct(coeffs, m_matrices, unit_mrow,
+                      interpret=default_interpret(interpret))

@@ -19,6 +19,72 @@ def test_pipeline_patches_shape_and_stats():
     assert stats.compressed_mb > 0
 
 
+def test_decoder_cache_keys_on_content_not_shape():
+    """Regression: the compiled-decoder cache used to key on
+    (len(blobs), total_bytes), so two different batches of equal count and
+    total size silently reused the first batch's device words and decoded
+    the wrong images. Reversing a 2-image batch keeps (count, total_bytes)
+    identical while changing every output pixel."""
+    ds = build_dataset(DatasetSpec("t3", n_images=2, width=64, height=48,
+                                   quality=80))
+    a, b = ds.jpeg_bytes
+    pipe = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=256)
+    tok_ab, _ = pipe.patches_for([a, b])
+    tok_ba, _ = pipe.patches_for([b, a])  # same (count, total_bytes)!
+    assert len(pipe._decoders) == 2  # distinct compiled decoders
+    # each batch decodes its own images, in its own order
+    fresh = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=256)
+    exp_ba, _ = fresh.patches_for([b, a])
+    np.testing.assert_array_equal(
+        np.asarray(tok_ba, np.float32), np.asarray(exp_ba, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(tok_ab[0], np.float32), np.asarray(tok_ba[1], np.float32))
+    assert not np.array_equal(np.asarray(tok_ab, np.float32),
+                              np.asarray(tok_ba, np.float32))
+
+
+def test_decoder_cache_is_bounded_lru():
+    """Content-keyed caching must not retain a decoder (and its on-device
+    batch words) for every distinct batch ever seen."""
+    ds = build_dataset(DatasetSpec("t5", n_images=4, width=32, height=32,
+                                   quality=70))
+    blobs = ds.jpeg_bytes
+    pipe = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128,
+                              decoder_cache_size=2)
+    batches = [[blobs[i]] for i in range(3)]
+    for b in batches:
+        pipe.patches_for(b)
+    assert len(pipe._decoders) == 2
+    # oldest entry evicted; most recent two retained
+    assert pipe._batch_key(batches[0]) not in pipe._decoders
+    assert pipe._batch_key(batches[2]) in pipe._decoders
+    # a hit refreshes recency: touch batch 1, insert batch 0, batch 2 evicts
+    pipe.patches_for(batches[1])
+    pipe.patches_for(batches[0])
+    assert pipe._batch_key(batches[1]) in pipe._decoders
+    assert pipe._batch_key(batches[2]) not in pipe._decoders
+    # size 0 = cache bypass, not a crash
+    nocache = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128,
+                                 decoder_cache_size=0)
+    nocache.patches_for(batches[0])
+    assert len(nocache._decoders) == 0
+
+
+def test_pipeline_backend_knob():
+    """backend="pallas" threads through to the decoder and yields the same
+    tokens as the jnp reference."""
+    ds = build_dataset(DatasetSpec("t4", n_images=2, width=32, height=32,
+                                   quality=75))
+    ref = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128)
+    pal = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128,
+                             backend="pallas")
+    tok_ref, _ = ref.patches_for(ds.jpeg_bytes)
+    tok_pal, _ = pal.patches_for(ds.jpeg_bytes)
+    assert next(iter(pal._decoders.values())).backend == "pallas"
+    np.testing.assert_array_equal(
+        np.asarray(tok_ref, np.float32), np.asarray(tok_pal, np.float32))
+
+
 def test_pipeline_batches_iterator():
     ds = build_dataset(DatasetSpec("t2", n_images=6, width=32, height=32,
                                    quality=70))

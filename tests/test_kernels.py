@@ -2,20 +2,22 @@
 
 Sweeps shapes/dtypes per the harness contract; the huffman kernel is
 additionally validated against the sequential-oracle-exact core decoder on
-real bitstreams.
+real bitstreams, and the backend knob (schedule × backend parity matrix)
+against the sequential oracle end-to-end.
 """
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import build_batch_plan, DecodeState
+from repro.core import build_batch_plan, DecodeState, ParallelDecoder
 from repro.core import decode as D
 from repro.core.bitstream import folded_idct_matrix
 from repro.jpeg import codec_ref as cr
 from repro.jpeg import tables as T
+from repro.kernels import backend as KB
 from repro.kernels.idct.ops import idct_units
 from repro.kernels.idct.ref import fused_idct_ref
-from repro.kernels.huffman.ops import decode_exits
+from repro.kernels.huffman.ops import decode_coeffs, decode_exits
 from repro.kernels.huffman.ref import decode_exits_ref
 from repro.kernels.color.color import upsample_color
 from repro.kernels.color.ref import upsample_color_ref
@@ -102,6 +104,176 @@ class TestHuffmanKernel:
                            chunk_bits=plan.chunk_bits)
         for a, b in zip(got, exp):
             assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_chunk_subset_gather_matches_ref(self):
+        """decode_exits(idx=...) — the faithful_sync decode_at path — must
+        equal the jnp reference decoded at the same chunk subset."""
+        from repro.core.sync import chain_entries, jacobi_sync
+
+        plan, dev = self._plan_dev(chunk_bits=128)
+        res = jacobi_sync(dev, s_max=plan.s_max,
+                          min_code_bits=plan.min_code_bits,
+                          max_rounds=plan.n_chunks + 2)
+        entries = chain_entries(dev, res.exits)
+        idx = jnp.asarray(
+            np.random.default_rng(3).permutation(plan.n_chunks)[: max(
+                2, plan.n_chunks // 2)].astype(np.int32))
+        entry = DecodeState(entries.p[idx], entries.u[idx], entries.z[idx],
+                            entries.n[idx])
+        meta = D.chunk_meta(dev, idx)
+        exp = decode_exits_ref(dev, entry, meta["word_base"], meta["limit"],
+                               meta["ts"], meta["upm"], s_max=plan.s_max,
+                               min_code_bits=plan.min_code_bits)
+        got = decode_exits(dev, entry, idx, s_max=plan.s_max,
+                           min_code_bits=plan.min_code_bits,
+                           chunk_bits=plan.chunk_bits)
+        for a, b in zip(got, exp):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_write_pass_matches_jnp_scatter(self):
+        """The Pallas write pass (Alg. 1 lines 9-15) reproduces the jnp
+        per-symbol scatter bit-for-bit from converged entries."""
+        from repro.core.sync import chain_entries, jacobi_sync
+
+        plan, dev = self._plan_dev(chunk_bits=128)
+        res = jacobi_sync(dev, s_max=plan.s_max,
+                          min_code_bits=plan.min_code_bits,
+                          max_rounds=plan.n_chunks + 2)
+        entries = chain_entries(dev, res.exits)
+        bases = D.chunk_write_bases(dev, res.exits.n)
+        seg_end = jnp.concatenate([
+            dev["seg_coeff_base"][1:],
+            jnp.asarray([plan.total_units * 64], dtype=jnp.int32),
+        ])
+        write_max = seg_end[dev["chunk_seg"]] - 1
+        meta = D.chunk_meta(dev)
+        out0 = jnp.zeros((plan.total_units * 64,), jnp.int32)
+        _, exp = D.decode_span(
+            dev, entries, meta["word_base"], meta["limit"], meta["ts"],
+            meta["upm"], s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            write=True, out=out0, write_base=bases, write_max=write_max,
+        )
+        exits, got = decode_coeffs(
+            dev, entries, out=out0, write_base=bases, write_max=write_max,
+            s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            chunk_bits=plan.chunk_bits,
+        )
+        assert np.array_equal(np.asarray(got), np.asarray(exp))
+        for a, b in zip(exits, res.exits):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _mixed_quality_batch():
+    blobs, results = [], []
+    for q in (30, 60, 95):
+        r = cr.encode_baseline(synth_image(48, 64, seed=q), quality=q,
+                               subsampling="4:2:0")
+        results.append(r)
+        blobs.append(r.jpeg_bytes)
+    exp = np.concatenate(
+        [cr.undiff_dc(r.image, cr.decode_coefficients(r.image))
+         for r in results]
+    )
+    return blobs, exp
+
+
+class TestBackendParityMatrix:
+    """Acceptance: decode_batch(..., backend="pallas") is bit-identical to
+    backend="jnp" and the sequential oracle for every sync schedule on a
+    mixed-quality batch (the 8-device mesh variant lives in
+    tests/test_distribution.py)."""
+
+    @pytest.mark.parametrize(
+        "sync", ["jacobi", "faithful", "specmap", "sequential"])
+    def test_coeffs_bit_identical_across_backends(self, sync):
+        blobs, exp = _mixed_quality_batch()
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            dec = ParallelDecoder.from_bytes(
+                blobs, chunk_bits=160, sync=sync, backend=backend,
+                interpret=True)
+            out = dec.coefficients()
+            assert out.converged
+            outs[backend] = np.asarray(out.coeffs)
+        assert np.array_equal(outs["jnp"], exp)
+        assert np.array_equal(outs["pallas"], exp)
+
+    @pytest.mark.parametrize("sync", ["jacobi", "faithful", "specmap"])
+    def test_exit_states_bit_identical_across_backends(self, sync):
+        from repro.core.sync import faithful_sync, jacobi_sync, specmap_sync
+        from repro.core.bitstream import MAX_UPM
+        from repro.kernels.huffman.ops import make_decode_exits
+
+        blobs, _ = _mixed_quality_batch()
+        plan = build_batch_plan(blobs, chunk_bits=160, seq_chunks=4)
+        dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        kernel_fn = make_decode_exits(
+            s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            chunk_bits=plan.chunk_bits, interpret=True)
+        kw = dict(s_max=plan.s_max, min_code_bits=plan.min_code_bits)
+        if sync == "jacobi":
+            run = lambda fn: jacobi_sync(
+                dev, max_rounds=plan.n_chunks + 2, decode_exits=fn, **kw)
+        elif sync == "faithful":
+            run = lambda fn: faithful_sync(
+                dev, seq_chunks=plan.seq_chunks,
+                max_outer=plan.n_sequences + 2, decode_exits=fn, **kw)
+        else:
+            run = lambda fn: specmap_sync(
+                dev, max_upm=MAX_UPM, max_verify=plan.n_chunks + 2,
+                decode_exits=fn, **kw)
+        ref = run(None)           # pure-jnp default
+        got = run(kernel_fn)      # Pallas kernel
+        assert bool(ref.converged) and bool(got.converged)
+        for a, b in zip(got.exits, ref.exits):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestBackendKnob:
+    def test_unknown_backend_fails_loudly(self):
+        blobs, _ = _mixed_quality_batch()
+        with pytest.raises(ValueError, match="unknown decode backend"):
+            ParallelDecoder.from_bytes(blobs, backend="cuda")
+        from repro.core.api import decode_batch
+        with pytest.raises(ValueError, match="unknown decode backend"):
+            decode_batch(blobs, backend="triton")
+
+    def test_use_kernels_selects_pallas_end_to_end(self):
+        """Regression: use_kernels=True used to swap only the IDCT and
+        silently drop the Huffman kernel."""
+        blobs, exp = _mixed_quality_batch()
+        dec = ParallelDecoder.from_bytes(
+            blobs, chunk_bits=160, use_kernels=True, interpret=True)
+        assert dec.backend == "pallas"
+        assert np.array_equal(np.asarray(dec.coefficients().coeffs), exp)
+
+    def test_resolve_backend(self):
+        assert KB.resolve_backend(None) == "jnp"
+        assert KB.resolve_backend(None, use_kernels=True) == "pallas"
+        assert KB.resolve_backend("pallas") == "pallas"
+        assert KB.resolve_backend("pallas", use_kernels=True) == "pallas"
+        with pytest.raises(ValueError):
+            KB.resolve_backend("mosaic")
+        # conflicting legacy flag + explicit backend must not silently
+        # drop the kernels
+        with pytest.raises(ValueError, match="conflicting backend"):
+            KB.resolve_backend("jnp", use_kernels=True)
+
+    def test_interpret_resolution_order(self, monkeypatch):
+        # explicit argument wins over everything
+        monkeypatch.setenv(KB.INTERPRET_ENV, "0")
+        assert KB.default_interpret(True) is True
+        # env var beats the platform default
+        assert KB.default_interpret(None) is False
+        monkeypatch.setenv(KB.INTERPRET_ENV, "1")
+        assert KB.default_interpret(None) is True
+        monkeypatch.setenv(KB.INTERPRET_ENV, "yes")
+        with pytest.raises(ValueError, match=KB.INTERPRET_ENV):
+            KB.default_interpret(None)
+        # platform default: interpret on CPU (test host), compiled off-CPU
+        monkeypatch.delenv(KB.INTERPRET_ENV)
+        import jax
+        assert KB.default_interpret(None) is (jax.default_backend() == "cpu")
 
 
 class TestColorKernel:
