@@ -16,7 +16,7 @@ import sys
 
 
 def main() -> None:
-    from . import backends, breakdown, datasets, quality, subseq_size
+    from . import backends, breakdown, datasets, quality, skew, subseq_size
     from .common import BENCH_BACKEND, BENCH_SCALE, emit
 
     suites = {
@@ -25,6 +25,7 @@ def main() -> None:
         "breakdown": breakdown,   # Fig. 3
         "subseq_size": subseq_size,  # Table II/III subsequence column
         "backends": backends,     # beyond-paper: jnp vs Pallas kernels
+        "skew": skew,             # beyond-paper: lane balancing (skewed corpus)
     }
     wanted = sys.argv[1:] or list(suites)
     all_rows = []

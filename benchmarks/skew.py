@@ -1,0 +1,103 @@
+"""Beyond-paper: lane balancing on a deliberately skewed corpus.
+
+ROADMAP "uneven-lane load balancing" item: one large JPEG plus many small
+ones. The decoder's work unit is the *sequence* (the paper's thread-block
+unit, ``seq_chunks`` chunks); without balancing, lanes follow bitstream
+order, so a contiguous per-device run of the sequence list — the naive
+static partition à la Sodsong et al.'s decode-time partitioning baseline —
+concentrates the big image's full-size sequences on few devices while the
+rest hold single-chunk smalls. ``repro.dist.plan.balance_lanes``
+redistributes whole sequences (round-robin or LPT) at plan time.
+
+Reported per policy (rows fold into the BENCH_JSON artifact in CI):
+
+* ``imbalance`` — max/mean per-mesh-lane real chunk count for an 8-lane
+  mesh, computed host-side (no devices needed). For the balanced
+  policies this is measured on the **materialized** permuted plan
+  (``basis=plan``). The identity plan has no sequence-granular layout to
+  measure — GSPMD splits its lane axis into equal contiguous chunk
+  blocks that cut segments mid-chain — so the ``none`` row instead
+  reports the **modeled** naive whole-sequence contiguous partition
+  (``basis=model``): what placement at the sync schedules' block
+  granularity looks like without the chunk_prev permutation freedom;
+* ``loads`` — the per-lane chunk counts themselves;
+* wall time decoding with that policy's (permuted, inert-padded) plan on
+  the local device(s) — bit-identical output across policies, asserted.
+
+The corpus is a fixed CI-sized synthetic (the imbalance ratio is a plan
+property, not a perf scale, so BENCH_SCALE does not apply; rows carry
+``corpus=fixed``). The wall-time decode honors BENCH_BACKEND.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BENCH_BACKEND, emit, time_call
+
+from repro.core import ParallelDecoder
+from repro.dist import plan as DP
+from repro.jpeg import codec_ref as cr
+from repro.jpeg.encoder import synth_frame
+
+N_LANES = 8          # mesh lanes the plan is audited/balanced for
+CHUNK_BITS = 256
+SEQ_CHUNKS = 8
+
+
+def skewed_blobs(big_px: int = 96, n_small: int = 90):
+    """One big high-quality JPEG + many small low-quality ones."""
+    rng = np.random.default_rng(0)
+    blobs = [cr.encode_baseline(synth_frame(rng, big_px, big_px, t=0.0),
+                                quality=95).jpeg_bytes]
+    for i in range(n_small):
+        blobs.append(cr.encode_baseline(synth_frame(rng, 16, 16, t=0.2 * i),
+                                        quality=70).jpeg_bytes)
+    return blobs
+
+
+def run_rows():
+    blobs = skewed_blobs()
+    rows = []
+    ref = None
+    ident_plan = None
+    for policy in ("none", "roundrobin", "lpt"):
+        dec = ParallelDecoder.from_bytes(
+            blobs, chunk_bits=CHUNK_BITS, seq_chunks=SEQ_CHUNKS,
+            balance=policy, lanes=N_LANES, backend=BENCH_BACKEND)
+        if policy == "none":  # identity plan: report the modeled baseline
+            ident_plan = dec.plan
+            loads, basis = DP.lane_loads(ident_plan, N_LANES, policy), "model"
+        else:                 # balanced: measure the materialized plan
+            loads, basis = DP.plan_lane_loads(dec.plan, N_LANES), "plan"
+        imbalance = loads.max() / max(loads.mean(), 1e-9)
+        # this first call compiles and doubles as the parity check ...
+        coeffs = np.asarray(dec.coefficients().coeffs)
+        if ref is None:
+            ref = coeffs
+        else:
+            assert np.array_equal(coeffs, ref), (
+                f"balance={policy!r} changed the decode output")
+
+        def run():
+            dec.coefficients().coeffs.block_until_ready()
+
+        # ... so the timing loop needs no extra warmup round
+        t = time_call(run, warmup=0, rounds=2)
+        rows.append({
+            "name": f"skew/{policy}",
+            "us_per_call": t * 1e6,
+            "derived": (
+                f"imbalance={imbalance:.2f};basis={basis}"
+                f";loads={'/'.join(str(int(x)) for x in loads)}"
+                f";lanes={N_LANES};chunks={ident_plan.n_chunks};corpus=fixed"
+            ),
+        })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ import numpy as np
 from . import decode as D
 from ..dist import sharding as S
 from ..kernels.backend import check_backend, resolve_backend
+from ..jpeg.format import parse_jpeg, segment_byte_bounds, unstuff_scan
 from .bitstream import BatchPlan, build_batch_plan
 from .state import DecodeState
 from .sync import SyncResult, faithful_sync, jacobi_sync, specmap_sync
@@ -43,8 +44,13 @@ Array = jnp.ndarray
 # Constraining these under active logical rules shards every lane-parallel
 # decode_span/sync loop over the data axis (GSPMD propagates the spec
 # through the while loops); off-mesh the constraint is a no-op.
+# chunk_prev/chunk_next/lane_perm/chunk_order are the explicit lane graph a
+# lane-balanced plan (dist/plan.balance_lanes) permutes; they hold global
+# lane/chunk indices (the gathers through them are cross-device), but they
+# are lane-length arrays, so they shard like the rest of the lane axis.
 _LANE_KEYS = ("chunk_start", "chunk_limit", "chunk_seg", "chunk_seq",
-              "chunk_first", "chunk_seq_first")
+              "chunk_first", "chunk_seq_first", "chunk_prev", "chunk_next",
+              "lane_perm", "chunk_order")
 
 
 def _shard_lanes(dev: Dict[str, Array]) -> Dict[str, Array]:
@@ -87,8 +93,21 @@ class DecodeOutput:
     plan: BatchPlan
 
 
-def _sequential_chunk_bits(blobs: Sequence[bytes]) -> int:
-    worst = max(len(b) for b in blobs) * 8  # scan is strictly shorter than file
+def _sequential_chunk_bits(unstuffed) -> int:
+    """Chunk size that makes every entropy *segment* a single chunk.
+
+    Sized from the unstuffed scans' longest segment (restart intervals
+    split a scan into many short segments), not from whole-file bytes — the
+    old file-sized bound inflated ``s_max`` (the per-chunk decode loop
+    bound, ``chunk_bits // min_code_bits + 2``) for every segment in the
+    batch. ``unstuffed`` is a list of ``unstuff_scan`` results, shared with
+    the plan builder so each scan is unstuffed once.
+    """
+    worst = 32
+    for clean, rst_bits in unstuffed:
+        bounds = segment_byte_bounds(clean, rst_bits)
+        longest = max(b - a for a, b in zip(bounds, bounds[1:]))
+        worst = max(worst, longest * 8)
     return -(-worst // 32) * 32
 
 
@@ -110,6 +129,11 @@ class ParallelDecoder:
             idct_impl = functools.partial(idct_units, interpret=interpret)
         self._idct_impl = idct_impl or D.idct_units_folded
         p = plan
+
+        # static at trace time: identity plans (the default) keep the old
+        # shift/direct-scan lowerings; permuted plans use the chunk_prev /
+        # chunk_order gather forms (see core/sync.chain_entries)
+        permuted = plan.balance != "none"
 
         @functools.partial(jax.jit, static_argnums=(1,))
         def _coeffs(dev: Dict[str, Array], trace_token):
@@ -134,31 +158,32 @@ class ParallelDecoder:
                 res = specmap_sync(
                     dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
                     max_upm=MAX_UPM, max_verify=p.n_chunks + 2,
-                    decode_exits=decode_exits,
+                    decode_exits=decode_exits, permuted=permuted,
                 )
             elif sync == "jacobi":
                 res = jacobi_sync(
                     dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
                     max_rounds=p.n_chunks + 2, decode_exits=decode_exits,
+                    permuted=permuted,
                 )
             elif sync == "faithful":
                 res = faithful_sync(
                     dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
                     seq_chunks=p.seq_chunks, max_outer=p.n_sequences + 2,
-                    decode_exits=decode_exits,
+                    decode_exits=decode_exits, permuted=permuted,
                 )
             else:  # sequential: one chunk per segment -> cold start is exact
                 exits = decode_exits(dev, DecodeState.cold(dev["chunk_start"]))
                 res = SyncResult(exits, jnp.asarray(1), jnp.asarray(True))
 
             # Output placement (Alg. 1 lines 7-8) + write pass (lines 9-15).
-            bases = D.chunk_write_bases(dev, res.exits.n)
+            bases = D.chunk_write_bases(dev, res.exits.n, permuted=permuted)
             seg_end = jnp.concatenate([
                 dev["seg_coeff_base"][1:],
                 jnp.asarray([p.total_units * 64], dtype=jnp.int32),
             ])
             write_max = seg_end[dev["chunk_seg"]] - 1
-            entries = _entries_from(dev, res.exits)
+            entries = _entries_from(dev, res.exits, permuted)
             out = jnp.zeros((p.total_units * 64,), jnp.int32)
             if backend == "pallas":
                 _, out = HK.decode_coeffs(
@@ -210,12 +235,32 @@ class ParallelDecoder:
                    seq_chunks: int = 32, sync: str = "jacobi",
                    idct_impl=None, use_kernels: bool = False,
                    backend: Optional[str] = None,
-                   interpret: Optional[bool] = None) -> "ParallelDecoder":
+                   interpret: Optional[bool] = None,
+                   balance: str = "none",
+                   lanes: Optional[int] = None) -> "ParallelDecoder":
+        """Parse, plan, and compile a decoder for one batch.
+
+        ``balance`` selects the plan-time lane partitioner
+        (:func:`repro.dist.plan.balance_lanes`): ``"roundrobin"`` or
+        ``"lpt"`` redistributes whole sequences of chunks over ``lanes``
+        mesh lanes (default: ``jax.device_count()``) so a skewed batch does
+        not concentrate one image's work on one device. Bit-identical to
+        ``"none"`` on every schedule and backend.
+        """
+        from ..dist import plan as DP
+        DP.check_balance(balance)
         backend = resolve_backend(backend, use_kernels)
+        images = [parse_jpeg(b) for b in blobs]
+        unstuffed = None
         if sync == "sequential":
-            chunk_bits = _sequential_chunk_bits(blobs)
+            unstuffed = [unstuff_scan(img.scan_data) for img in images]
+            chunk_bits = _sequential_chunk_bits(unstuffed)
         plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
-                                seq_chunks=seq_chunks)
+                                seq_chunks=seq_chunks, parsed=images,
+                                unstuffed=unstuffed)
+        if balance != "none":
+            n_lanes = int(lanes) if lanes is not None else jax.device_count()
+            plan = DP.balance_lanes(plan, n_lanes, balance)
         return cls(plan, sync=sync, idct_impl=idct_impl, backend=backend,
                    interpret=interpret)
 
@@ -268,10 +313,10 @@ class ParallelDecoder:
             return self.decode(emit=emit)
 
 
-def _entries_from(dev, exits: DecodeState) -> DecodeState:
+def _entries_from(dev, exits: DecodeState, permuted: bool = True) -> DecodeState:
     from .sync import chain_entries
 
-    return chain_entries(dev, exits)
+    return chain_entries(dev, exits, permuted)
 
 
 def decode_batch(
@@ -284,6 +329,7 @@ def decode_batch(
     backend: Optional[str] = None,
     use_kernels: bool = False,
     interpret: Optional[bool] = None,
+    balance: str = "none",
 ) -> DecodeOutput:
     """One-shot convenience wrapper (builds the plan + compiles + decodes).
 
@@ -293,10 +339,17 @@ def decode_batch(
 
     ``backend`` selects the decode implementation ("jnp" or "pallas" — see
     the module docstring); the output is bit-identical either way.
+
+    ``balance`` ("none" | "roundrobin" | "lpt") applies the plan-time lane
+    partitioner over the mesh's device count, so a skewed batch (one big
+    JPEG + many small ones) spreads its sequences across every device
+    instead of concentrating them in bitstream order. Also bit-identical.
     """
     dec = ParallelDecoder.from_bytes(
         blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync,
         backend=backend, use_kernels=use_kernels, interpret=interpret,
+        balance=balance,
+        lanes=(mesh.devices.size if mesh is not None else None),
     )
     if mesh is None:
         return dec.decode(emit=emit)

@@ -22,7 +22,8 @@ import numpy as np
 
 from ..jpeg import tables as T
 from ..jpeg.codec_ref import dct_matrix, scan_unit_layout
-from ..jpeg.format import JpegImage, parse_jpeg, pack_bits_to_words, unstuff_scan
+from ..jpeg.format import (JpegImage, parse_jpeg, pack_bits_to_words,
+                           segment_byte_bounds, unstuff_scan)
 
 MAX_UPM = 6  # max data units per MCU we support (4:2:0 -> 4+1+1)
 
@@ -110,14 +111,29 @@ class BatchPlan:
     seg_image: np.ndarray           # (S,) int32
 
     # --- per chunk -----------------------------------------------------------
+    # Chunk arrays are indexed by *lane*. A lane holds one subsequence chunk;
+    # by default lanes follow bitstream order, but a lane-permutation plan
+    # (dist/plan.balance_lanes) may reorder them and append inert padding
+    # lanes (limit == start, chunk_seq == -1) so every mesh lane gets an
+    # equal, contiguous block. Chain adjacency is therefore *explicit*
+    # (chunk_prev / chunk_next), never positional.
     chunk_seg: np.ndarray           # (C,) int32
     chunk_start: np.ndarray         # (C,) int32 bit offset in segment
     chunk_limit: np.ndarray         # (C,) int32 (end bit, clipped to seg_nbits)
     chunk_first: np.ndarray         # (C,) bool first chunk of its segment
-    chunk_seq: np.ndarray           # (C,) int32 global sequence id
+    chunk_seq: np.ndarray           # (C,) int32 global sequence id (-1 inert)
     chunk_seq_first: np.ndarray     # (C,) bool first chunk of its sequence
+    chunk_prev: np.ndarray          # (C,) int32 lane of predecessor chunk
+                                    #   (self at segment starts / inert lanes)
+    chunk_next: np.ndarray          # (C,) int32 lane of successor chunk
+                                    #   (self at segment ends / inert lanes)
+    lane_perm: np.ndarray           # (C,) int32 lane -> bitstream chunk id
+                                    #   (ids >= n_real_chunks are inert)
+    chunk_order: np.ndarray         # (C,) int32 bitstream chunk id -> lane
+    n_real_chunks: int              # chunks that carry bits (excl. inert)
+    balance: str                    # "none" | "roundrobin" | "lpt"
     n_sequences: int
-    seq_last_chunk: np.ndarray      # (Q,) int32 last chunk of each sequence
+    seq_last_chunk: np.ndarray      # (Q,) int32 lane of each sequence's last chunk
 
     # --- per unit (entropy->pixel bridge) -------------------------------------
     unit_comp: np.ndarray           # (U,) int32 component of each data unit
@@ -149,6 +165,10 @@ class BatchPlan:
             "chunk_first": self.chunk_first,
             "chunk_seq": self.chunk_seq,
             "chunk_seq_first": self.chunk_seq_first,
+            "chunk_prev": self.chunk_prev,
+            "chunk_next": self.chunk_next,
+            "lane_perm": self.lane_perm,
+            "chunk_order": self.chunk_order,
             "seq_last_chunk": self.seq_last_chunk,
             "unit_comp": self.unit_comp,
             "unit_seg_first": self.unit_seg_first,
@@ -165,6 +185,41 @@ class BatchPlan:
 # Plan builder
 # ---------------------------------------------------------------------------
 
+def check_coeff_capacity(total_units: int) -> None:
+    """Reject batches whose dense coefficient index overflows int32.
+
+    ``BatchPlan.device_arrays`` ships ``seg_coeff_base`` (and the write pass
+    computes ``base + local`` offsets) as int32; a batch with
+    ``total_units * 64 >= 2**31`` would silently wrap and corrupt write
+    offsets. Fail loudly at plan time instead.
+    """
+    if total_units * 64 >= 2 ** 31:
+        raise ValueError(
+            f"batch has {total_units} data units -> {total_units * 64} dense "
+            f"coefficients, which overflows the int32 device offsets "
+            f"(seg_coeff_base / write pass). Split the batch below "
+            f"{2 ** 31 // 64} units."
+        )
+
+
+def chain_adjacency(chunk_first: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(chunk_prev, chunk_next) in chunk-id space from segment-first flags.
+
+    The single definition of chain adjacency: predecessor/successor follow
+    bitstream order within a segment; segment-first chunks are their own
+    predecessor and segment-last chunks their own successor (inert padding
+    chunks, flagged first, therefore self-chain). ``build_batch_plan``
+    uses this directly (identity lanes); ``dist/plan.balance_lanes`` maps
+    it through its lane permutation — the two must never disagree.
+    """
+    n = len(chunk_first)
+    c_ids = np.arange(n, dtype=np.int32)
+    prev_c = np.where(chunk_first, c_ids, c_ids - 1).astype(np.int32)
+    next_is_first = np.concatenate([chunk_first[1:], [True]])
+    next_c = np.where(next_is_first, c_ids, c_ids + 1).astype(np.int32)
+    return prev_c, next_c
+
+
 def _min_code_bits(specs) -> int:
     m = 16
     for spec in specs:
@@ -179,8 +234,14 @@ def build_batch_plan(
     chunk_bits: int = 1024,
     seq_chunks: int = 32,
     parsed: Optional[Sequence[JpegImage]] = None,
+    unstuffed: Optional[Sequence] = None,
 ) -> BatchPlan:
-    """Parse + frame a batch of JPEG files into a device-ready plan."""
+    """Parse + frame a batch of JPEG files into a device-ready plan.
+
+    ``parsed`` / ``unstuffed`` let callers that already parsed the headers
+    or unstuffed the scans (e.g. sequential-mode chunk sizing in
+    ``core/api.py``) share that work instead of redoing it here.
+    """
     assert chunk_bits % 32 == 0, "chunk size must be a multiple of 32 bits"
     images = list(parsed) if parsed is not None else [parse_jpeg(b) for b in blobs]
     n_images = len(images)
@@ -250,7 +311,8 @@ def build_batch_plan(
 
     for ii, img in enumerate(images):
         ts = tableset_for(img)
-        clean, rst_bits = unstuff_scan(img.scan_data)
+        clean, rst_bits = (unstuffed[ii] if unstuffed is not None
+                           else unstuff_scan(img.scan_data))
         upm = img.units_per_mcu
         ucomp = img.unit_component()
         comp_mrow = np.array(
@@ -258,7 +320,7 @@ def build_batch_plan(
             dtype=np.int32,
         )
         # segment boundaries in the clean stream (byte aligned)
-        bounds = [0] + [int(b) // 8 for b in rst_bits] + [len(clean)]
+        bounds = segment_byte_bounds(clean, rst_bits)
         if img.restart_interval:
             units_per_interval = img.restart_interval * upm
         else:
@@ -314,10 +376,16 @@ def build_batch_plan(
     seq_last_chunk = np.zeros(n_sequences, dtype=np.int32)
     seq_last_chunk[chunk_seq] = np.arange(len(chunk_seg), dtype=np.int32)
 
+    # explicit chain adjacency (identity layout: lane == bitstream chunk id)
+    n_chunks = int(len(chunk_seg))
+    c_ids = np.arange(n_chunks, dtype=np.int32)
+    chunk_prev, chunk_next = chain_adjacency(chunk_first)
+
     min_code = _min_code_bits(all_specs)
     s_max = chunk_bits // min_code + 2
 
     total_units = int(seg_units.sum())
+    check_coeff_capacity(total_units)
 
     # ---- pixel-stage layout (uniform batches) ---------------------------------
     comp_unit_idx = comp_block_idx = comp_grid = None
@@ -338,7 +406,7 @@ def build_batch_plan(
         min_code_bits=min_code,
         n_images=n_images,
         n_segments=n_segments,
-        n_chunks=int(len(chunk_seg)),
+        n_chunks=n_chunks,
         total_units=total_units,
         uniform=uniform,
         geometry=geometry,
@@ -358,6 +426,12 @@ def build_batch_plan(
         chunk_first=chunk_first,
         chunk_seq=chunk_seq,
         chunk_seq_first=chunk_seq_first,
+        chunk_prev=chunk_prev,
+        chunk_next=chunk_next,
+        lane_perm=c_ids.copy(),
+        chunk_order=c_ids.copy(),
+        n_real_chunks=n_chunks,
+        balance="none",
         n_sequences=n_sequences,
         seq_last_chunk=seq_last_chunk,
         unit_comp=np.concatenate(unit_comp_l).astype(np.int32),

@@ -202,9 +202,24 @@ def segmented_exclusive_cumsum(values: jnp.ndarray, first_flags: jnp.ndarray):
     return out
 
 
-def chunk_write_bases(dev, exit_n: jnp.ndarray):
-    """Absolute dense-coefficient write base for every chunk."""
-    local = segmented_exclusive_cumsum(exit_n, dev["chunk_first"])
+def chunk_write_bases(dev, exit_n: jnp.ndarray, permuted: bool = True):
+    """Absolute dense-coefficient write base for every chunk lane.
+
+    The segmented prefix sum runs over *bitstream* chunk order — lanes may
+    be permuted by a lane-balance plan, so gather ``n`` into chunk order
+    via ``chunk_order``, scan, and gather the bases back to lanes via
+    ``lane_perm``. Inert padding chunks order after every real chunk and
+    are segment-firsts, so they contribute nothing. ``permuted=False``
+    (static, for identity plans) skips both gathers and scans the sharded
+    lane order directly.
+    """
+    if permuted:
+        order = dev["chunk_order"]   # bitstream chunk id -> lane
+        local_o = segmented_exclusive_cumsum(
+            exit_n[order], dev["chunk_first"][order])
+        local = local_o[dev["lane_perm"]]
+    else:
+        local = segmented_exclusive_cumsum(exit_n, dev["chunk_first"])
     return dev["seg_coeff_base"][dev["chunk_seg"]] + local
 
 

@@ -50,15 +50,32 @@ def _shift_one(a: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([a[:1], a[:-1]])
 
 
-def chain_entries(dev: Dict[str, jnp.ndarray], exits: DecodeState) -> DecodeState:
-    """entry[i] = exit[i-1]; first chunk of a segment gets the true cold state."""
-    prev = DecodeState(
-        _shift_one(exits.p), _shift_one(exits.u), _shift_one(exits.z),
-        _shift_one(exits.n),
-    )
+def chain_entries(dev: Dict[str, jnp.ndarray], exits: DecodeState,
+                  permuted: bool = True) -> DecodeState:
+    """entry[i] = exit[chunk_prev[i]]; segment-first chunks get the cold state.
+
+    Chain adjacency is the explicit ``chunk_prev`` lane graph, not positional
+    order, so every schedule built on this is invariant under the lane
+    permutations produced by ``repro.dist.plan.balance_lanes`` (inert padding
+    lanes are their own predecessor and marked ``chunk_first``, so they stay
+    cold).
+
+    ``permuted=False`` is a static fast path for identity plans
+    (``plan.balance == "none"``, known at trace time): the predecessor
+    gather degenerates to a shift, which GSPMD lowers to a cheap boundary
+    exchange on a mesh instead of a runtime-index gather it cannot prove
+    is the identity. Callers that may see permuted plans must keep the
+    default.
+    """
+    if permuted:
+        prev = _gather(exits, dev["chunk_prev"])
+    else:
+        prev = DecodeState(
+            _shift_one(exits.p), _shift_one(exits.u), _shift_one(exits.z),
+            _shift_one(exits.n),
+        )
     cold = DecodeState.cold(dev["chunk_start"])
-    first = dev["chunk_first"]
-    return cold.select(first, prev)
+    return cold.select(dev["chunk_first"], prev)
 
 
 def _states_equal(a: DecodeState, b: DecodeState) -> jnp.ndarray:
@@ -89,6 +106,7 @@ def _scatter_where(
 def jacobi_sync(
     dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
     max_rounds: int, decode_exits: Optional[DecodeExitsFn] = None,
+    permuted: bool = True,
 ) -> SyncResult:
     if decode_exits is None:
         decode_exits = make_decode_exits(s_max=s_max, min_code_bits=min_code_bits)
@@ -102,7 +120,7 @@ def jacobi_sync(
 
     def body(carry):
         exits, _, r = carry
-        new = decode_exits(dev, chain_entries(dev, exits))
+        new = decode_exits(dev, chain_entries(dev, exits, permuted))
         return new, _states_equal(new, exits), r + 1
 
     exits, done, rounds = jax.lax.while_loop(
@@ -135,6 +153,7 @@ def specmap_sync(
     dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
     max_upm: int, max_verify: int,
     decode_exits: Optional[DecodeExitsFn] = None,
+    permuted: bool = True,
 ) -> SyncResult:
     if decode_exits is None:
         decode_exits = make_decode_exits(s_max=s_max, min_code_bits=min_code_bits)
@@ -170,11 +189,27 @@ def specmap_sync(
         # (b after a): out[h] = b[a[h]]  — gather along the phase axis
         return jnp.take_along_axis(b, a, axis=0)
 
-    prefix = jax.lax.associative_scan(compose, maps, axis=1)
+    # The scan composes maps along the *bitstream* chunk order; lanes may be
+    # permuted (dist/plan.balance_lanes), so gather into chunk order, scan,
+    # and gather the resolved entry phases back to lanes. Inert padding
+    # chunks sort after every real chunk and are segment-firsts (constant
+    # maps), so they never perturb the prefix of real chunks. For identity
+    # plans (permuted=False, static) both gathers are skipped — the scan
+    # runs directly on the sharded lane order.
+    if permuted:
+        order = dev["chunk_order"]   # bitstream chunk id -> lane
+        perm = dev["lane_perm"]      # lane -> bitstream chunk id
+        first_o = first[order]
+        maps_o = maps[:, order]
+    else:
+        first_o = first
+        maps_o = maps
+    prefix = jax.lax.associative_scan(compose, maps_o, axis=1)
     # entry phase of chunk i = composed map of chunks [seg_start..i-1] at 0
-    entry_u = jnp.concatenate(
+    entry_o = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), prefix[0, :-1]])
-    entry_u = jnp.where(first, 0, entry_u)
+    entry_o = jnp.where(first_o, 0, entry_o)
+    entry_u = entry_o[perm] if permuted else entry_o
 
     # --- select per-chunk exits for the resolved entry phase ---------------
     sel = lambda arr: jnp.take_along_axis(arr, entry_u[None, :], axis=0)[0]
@@ -188,7 +223,7 @@ def specmap_sync(
 
     def body(carry):
         ex, _, r = carry
-        new = decode_exits(dev, chain_entries(dev, ex))
+        new = decode_exits(dev, chain_entries(dev, ex, permuted))
         return new, _states_equal(new, ex), r + 1
 
     exits, done, rounds = jax.lax.while_loop(
@@ -204,6 +239,7 @@ def faithful_sync(
     dev: Dict[str, jnp.ndarray], *, s_max: int, min_code_bits: int,
     seq_chunks: int, max_outer: int, verify: bool = True,
     decode_exits: Optional[DecodeExitsFn] = None,
+    permuted: bool = True,
 ) -> SyncResult:
     """Paper Algorithm 3, plus an optional verification fixed-point pass.
 
@@ -220,9 +256,20 @@ def faithful_sync(
         decode_exits = make_decode_exits(s_max=s_max, min_code_bits=min_code_bits)
     C = dev["chunk_seg"].shape[0]
     idx = jnp.arange(C, dtype=jnp.int32)
+    nxt_of = dev["chunk_next"]
 
     def decode_at(targets: jnp.ndarray, entry: DecodeState) -> DecodeState:
         return decode_exits(dev, entry, targets)
+
+    def step(tgt: jnp.ndarray):
+        """Advance chain targets one chunk along the explicit segment chain.
+
+        ``chunk_next`` links lanes in bitstream order within a segment
+        (permutation-invariant); a lane with no successor maps to itself,
+        which the returned mask marks dead.
+        """
+        nxt = nxt_of[tgt]
+        return nxt, nxt != tgt
 
     # ---- Phase 0: speculative cold decode of every subsequence ------------
     cold = DecodeState.cold(dev["chunk_start"])
@@ -231,37 +278,36 @@ def faithful_sync(
 
     # ---- Phase 1: intra-sequence chains (lockstep rounds) ------------------
     def intra_cond(carry):
-        _, _, alive, t, _ = carry
+        _, _, alive, _, t, _ = carry
         return jnp.any(alive) & (t < seq_chunks)
 
     def intra_body(carry):
-        s_info, chain, alive, t, r = carry
-        target = idx + t
-        tgt = jnp.clip(target, 0, C - 1)
+        s_info, chain, alive, tgt, t, r = carry
+        tgt, has = step(tgt)
         valid = (
             alive
-            & (target < C)
+            & has
             & (dev["chunk_seq"][tgt] == dev["chunk_seq"])  # same sequence
         )
         new = decode_at(tgt, chain)
         synced = new.puz_equal(_gather(s_info, tgt))
         s_info = _scatter_where(s_info, tgt, new, valid)
         alive = valid & ~synced
-        return s_info, new, alive, t + 1, r + 1
+        return s_info, new, alive, tgt, t + 1, r + 1
 
     chain0 = s_info
     alive0 = jnp.ones(C, dtype=bool)
-    s_info, _, _, _, rounds = jax.lax.while_loop(
-        intra_cond, intra_body, (s_info, chain0, alive0, jnp.asarray(1), rounds)
+    s_info, _, _, _, _, rounds = jax.lax.while_loop(
+        intra_cond, intra_body,
+        (s_info, chain0, alive0, idx, jnp.asarray(1), rounds)
     )
 
     # ---- Phase 2: inter-sequence chains, outer host loop --------------------
     roots = dev["seq_last_chunk"]
     root_seq = dev["chunk_seq"][roots]
-    root_seg = dev["chunk_seg"][roots]
-    next_chunk = jnp.clip(roots + 1, 0, C - 1)
-    # a boundary needs syncing only if the next chunk continues the same segment
-    needs = (roots + 1 < C) & (dev["chunk_seg"][next_chunk] == root_seg)
+    # a boundary needs syncing only if the next chunk continues the same
+    # segment (chunk_next never crosses a segment boundary)
+    needs = nxt_of[roots] != roots
     seq_synced0 = ~needs
 
     def outer_cond(carry):
@@ -273,31 +319,29 @@ def faithful_sync(
         chain = _gather(s_info, roots)
 
         def inner_cond(c):
-            _, _, alive, _, t, _ = c
+            _, _, alive, _, _, t, _ = c
             return jnp.any(alive) & (t <= seq_chunks)
 
         def inner_body(c):
-            s_info, chain, alive, found, t, r = c
-            target = roots + t
-            tgt = jnp.clip(target, 0, C - 1)
+            s_info, chain, alive, found, tgt, t, r = c
+            tgt, has = step(tgt)
             valid = (
                 alive
-                & (target < C)
-                & (dev["chunk_seg"][tgt] == root_seg)           # same segment
-                & (dev["chunk_seq"][tgt] == root_seq + 1)        # next sequence only
+                & has
+                & (dev["chunk_seq"][tgt] == root_seq + 1)  # next sequence only
             )
             new = decode_at(tgt, chain)
             synced = new.puz_equal(_gather(s_info, tgt))
             s_info = _scatter_where(s_info, tgt, new, valid)
             found = found | (valid & synced)
             alive = valid & ~synced
-            return s_info, new, alive, found, t + 1, r + 1
+            return s_info, new, alive, found, tgt, t + 1, r + 1
 
         alive = ~seq_synced
         found0 = jnp.zeros_like(seq_synced)
-        s_info, chain, _, found, _, r = jax.lax.while_loop(
+        s_info, chain, _, found, _, _, r = jax.lax.while_loop(
             inner_cond, inner_body,
-            (s_info, chain, alive, found0, jnp.asarray(1), r),
+            (s_info, chain, alive, found0, roots, jnp.asarray(1), r),
         )
         # only boundaries whose chain *detected* a sync point are done; chains
         # that ran off the end of the next sequence retry in the next outer
@@ -318,7 +362,7 @@ def faithful_sync(
 
     def v_body(carry):
         exits, _, r = carry
-        new = decode_exits(dev, chain_entries(dev, exits))
+        new = decode_exits(dev, chain_entries(dev, exits, permuted))
         return new, _states_equal(new, exits), r + 1
 
     s_info, done, rounds = jax.lax.while_loop(

@@ -45,7 +45,8 @@ class JpegVisionPipeline:
     def __init__(self, patch: int = 16, embed_dim: int = 1024,
                  chunk_bits: int = 1024, sync: str = "jacobi",
                  use_kernels: bool = False, backend: Optional[str] = None,
-                 seed: int = 0, mesh=None, decoder_cache_size: int = 16):
+                 seed: int = 0, mesh=None, balance: str = "none",
+                 decoder_cache_size: int = 16):
         self.patch = patch
         self.embed_dim = embed_dim
         self.chunk_bits = chunk_bits
@@ -53,8 +54,11 @@ class JpegVisionPipeline:
         self.use_kernels = use_kernels
         self.backend = backend
         # with a mesh, decode work (chunk lanes / output units) is sharded
-        # over the data axis — the input pipeline scales with the job
+        # over the data axis — the input pipeline scales with the job;
+        # balance ("roundrobin"/"lpt") redistributes skewed batches' chunk
+        # lanes over the mesh's devices at plan time (bit-identical)
         self.mesh = mesh
+        self.balance = balance
         rng = np.random.default_rng(seed)
         # stub patch-embedding projection (fixed; a real run would train it)
         self.w_embed = jnp.asarray(
@@ -89,7 +93,10 @@ class JpegVisionPipeline:
         if dec is None:
             dec = ParallelDecoder.from_bytes(
                 list(blobs), chunk_bits=self.chunk_bits, sync=self.sync,
-                use_kernels=self.use_kernels, backend=self.backend)
+                use_kernels=self.use_kernels, backend=self.backend,
+                balance=self.balance,
+                lanes=(self.mesh.devices.size
+                       if self.mesh is not None else None))
             self._decoders[key] = dec
             while len(self._decoders) > self._decoder_cache_size:
                 self._decoders.popitem(last=False)
@@ -120,7 +127,19 @@ class JpegVisionPipeline:
         )
         return tokens, stats
 
-    def batches(self, dataset: Dataset, batch_size: int):
+    def batches(self, dataset: Dataset, batch_size: int,
+                drop_remainder: bool = False):
+        """Yield (tokens, stats) per batch of ``batch_size`` images.
+
+        When the dataset size does not divide, the tail is yielded as a
+        short final batch — silently dropping the last
+        ``len(blobs) % batch_size`` images (the old behavior) loses data in
+        eval/export pipelines. Pass ``drop_remainder=True`` for fixed-shape
+        training streams.
+        """
         blobs = dataset.jpeg_bytes
-        for i in range(0, len(blobs) - batch_size + 1, batch_size):
-            yield self.patches_for(blobs[i : i + batch_size])
+        for i in range(0, len(blobs), batch_size):
+            batch = blobs[i : i + batch_size]
+            if drop_remainder and len(batch) < batch_size:
+                return
+            yield self.patches_for(batch)

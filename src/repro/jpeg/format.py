@@ -312,6 +312,19 @@ def unstuff_scan(scan: bytes) -> Tuple[np.ndarray, np.ndarray]:
     return clean.copy(), rst_bits
 
 
+def segment_byte_bounds(clean: np.ndarray, rst_bits: np.ndarray) -> List[int]:
+    """Byte offsets delimiting the restart segments of an unstuffed scan.
+
+    Returns ``[0, b1, ..., len(clean)]``: segment i spans
+    ``clean[bounds[i]:bounds[i+1]]``. This is the single definition of
+    segment framing — both the batch planner (one entropy segment per
+    restart interval) and sequential-mode chunk sizing (``chunk_bits`` must
+    cover the longest segment so every segment stays one chunk) derive
+    from it; they must never disagree.
+    """
+    return [0] + [int(b) // 8 for b in rst_bits] + [len(clean)]
+
+
 def stuff_scan(clean: np.ndarray) -> bytes:
     """Apply byte stuffing: insert 0x00 after every 0xFF."""
     clean = np.asarray(clean, dtype=np.uint8)

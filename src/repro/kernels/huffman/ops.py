@@ -13,6 +13,15 @@ chunk-lane axis: per-lane operands are split across devices (padded to a
 multiple of the axis size with inert lanes), the word buffer and LUTs are
 replicated, and each device runs the identical Pallas program on its lane
 shard — the kernel equivalent of the GSPMD-sharded jnp hot path.
+
+Lane order is whatever the plan says, never positional: chain adjacency
+lives in the plan's explicit ``chunk_prev``/``chunk_next`` graph (gathered
+by ``core/sync.chain_entries`` outside the kernel), so the kernels are
+invariant under the lane permutations a balanced plan
+(``repro.dist.plan.balance_lanes``) applies. Such plans arrive already
+padded to a lane multiple with inert lanes (start == limit), which the
+kernels treat exactly like the shard_map padding below — ``pad`` is then 0
+when the balance lane count matches the mesh.
 """
 from __future__ import annotations
 

@@ -86,6 +86,27 @@ class TestParallelDecoder:
         for a, b in zip(ja.exits, fa.exits):
             assert np.array_equal(np.asarray(a), np.asarray(b))
 
+    def test_sequential_chunk_bits_sized_from_segments(self):
+        """Regression: sequential mode sized its single chunk per segment
+        from whole-*file* bytes, inflating s_max (the per-chunk decode loop
+        bound) for every segment in the batch. It must be sized from the
+        parsed scans' longest segment instead — and shrink accordingly."""
+        results = encode_batch(n=3, restart_interval=2)
+        blobs = [r.jpeg_bytes for r in results]
+        dec = ParallelDecoder.from_bytes(blobs, sync="sequential")
+        plan = dec.plan
+        # still one chunk per segment (the sequential-baseline contract)
+        assert plan.n_chunks == plan.n_segments
+        assert plan.chunk_bits >= int(plan.seg_nbits.max())
+        # the old file-sized bound, and the s_max it implied
+        file_bits = -(-max(len(b) for b in blobs) * 8 // 32) * 32
+        old_s_max = file_bits // plan.min_code_bits + 2
+        assert plan.chunk_bits < file_bits
+        assert plan.s_max < old_s_max
+        out = dec.coefficients()
+        assert out.converged
+        assert np.array_equal(np.asarray(out.coeffs), oracle_coeffs(results))
+
     def test_restart_markers_as_segments(self):
         results = encode_batch(n=2, restart_interval=2)
         blobs = [r.jpeg_bytes for r in results]
@@ -200,6 +221,43 @@ class TestDecodeEdgePaths:
         with pytest.raises(NotImplementedError,
                            match="geometry-uniform batch"):
             dec.decode(emit="rgb")
+
+
+class TestCoeffCapacityGuard:
+    """device_arrays ships seg_coeff_base as int32; a batch with >= 2**25
+    data units would silently wrap the write offsets. build_batch_plan must
+    refuse loudly instead (synthetic sizes — a real batch that big would
+    need gigapixels of JPEG)."""
+
+    def test_guard_boundary(self):
+        from repro.core.bitstream import check_coeff_capacity
+
+        check_coeff_capacity(2 ** 25 - 1)  # last addressable size: fine
+        with pytest.raises(ValueError, match="int32"):
+            check_coeff_capacity(2 ** 25)
+        with pytest.raises(ValueError, match="overflows"):
+            check_coeff_capacity(2 ** 30)
+
+    def test_build_batch_plan_calls_guard(self, monkeypatch):
+        import repro.core.bitstream as B
+
+        seen = {}
+
+        def spy(total_units):
+            seen["units"] = total_units
+            return None
+
+        monkeypatch.setattr(B, "check_coeff_capacity", spy)
+        results = encode_batch(n=2)
+        plan = B.build_batch_plan([r.jpeg_bytes for r in results],
+                                  chunk_bits=128)
+        assert seen["units"] == plan.total_units
+
+    def test_small_batches_unaffected(self):
+        results = encode_batch(n=1, h=16, w=16)
+        plan = build_batch_plan([r.jpeg_bytes for r in results],
+                                chunk_bits=128)
+        assert plan.total_units * 64 < 2 ** 31
 
 
 class TestDecodeInternals:

@@ -223,6 +223,50 @@ class TestMultiDevice:
         """)
         assert "PALLAS_SHARDED 8" in out
 
+    def test_lane_balanced_decode_bit_exact_and_even(self):
+        """A skewed batch (one multi-restart JPEG + small tails) decoded
+        under balance="roundrobin"/"lpt" on an 8-device mesh stays bit
+        identical to the oracle, and the LPT plan's per-device real chunk
+        counts differ by at most one sequence's worth of chunks."""
+        out = run_sub("""
+            import numpy as np, jax
+            from repro.core import build_batch_plan
+            from repro.core.api import decode_batch
+            from repro.dist import plan as DP
+            from repro.jpeg import codec_ref as cr
+            rng = np.random.default_rng(0)
+            yy, xx = np.mgrid[0:48, 0:64]
+            big = np.clip(np.stack([xx*2, yy*2, xx+yy], -1) +
+                          rng.normal(0, 15, (48, 64, 3)), 0, 255).astype(np.uint8)
+            results = [cr.encode_baseline(big, quality=92, restart_interval=2)]
+            for i in range(3):
+                sm = np.clip(np.stack([xx[:16,:16]*3, yy[:16,:16]*3,
+                                       xx[:16,:16]+yy[:16,:16]], -1) +
+                             rng.normal(0, 15, (16, 16, 3)),
+                             0, 255).astype(np.uint8)
+                results.append(cr.encode_baseline(sm, quality=60))
+            blobs = [r.jpeg_bytes for r in results]
+            exp = np.concatenate([
+                cr.undiff_dc(p := cr.parse_jpeg(b), cr.decode_coefficients(p))
+                for b in blobs])
+            mesh = jax.make_mesh((8,), ("data",))
+            for policy in ("roundrobin", "lpt"):
+                out = decode_batch(blobs, chunk_bits=128, seq_chunks=4,
+                                   emit="coeffs", mesh=mesh, balance=policy)
+                assert out.converged, policy
+                assert np.array_equal(np.asarray(out.coeffs), exp), policy
+            # per-device load: every mesh lane's block of the LPT plan holds
+            # a real-chunk count within one sequence of every other's
+            plan = build_batch_plan(blobs, chunk_bits=128, seq_chunks=4)
+            bal = DP.balance_lanes(plan, 8, "lpt")
+            loads = DP.plan_lane_loads(bal, 8)
+            assert loads.sum() == plan.n_chunks
+            assert int(loads.max() - loads.min()) <= plan.seq_chunks, loads
+            n_dev = len(out.coeffs.sharding.device_set)
+            print("LANE_BALANCED", n_dev, loads.tolist())
+        """)
+        assert "LANE_BALANCED 8" in out
+
     def test_elastic_remesh_restore(self):
         """Checkpoint on 8 devices, restore onto 4 (elastic restart)."""
         import tempfile

@@ -95,6 +95,24 @@ def test_pipeline_batches_iterator():
         assert patches.shape[0] == 3
 
 
+def test_pipeline_batches_yields_tail():
+    """Regression: batches() silently dropped the last
+    len(blobs) % batch_size images. The tail must come back as a short
+    final batch unless drop_remainder=True is asked for."""
+    ds = build_dataset(DatasetSpec("t6", n_images=7, width=32, height=32,
+                                   quality=70))
+    pipe = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128)
+    batches = list(pipe.batches(ds, batch_size=3))
+    assert [p.shape[0] for p, _ in batches] == [3, 3, 1]
+    assert sum(s.n_images for _, s in batches) == 7
+    # fixed-shape training streams can opt back into dropping
+    dropped = list(pipe.batches(ds, batch_size=3, drop_remainder=True))
+    assert [p.shape[0] for p, _ in dropped] == [3, 3]
+    # a batch size larger than the dataset still yields everything
+    assert [p.shape[0] for p, _ in pipe.batches(ds, batch_size=10)] == [7]
+    assert list(pipe.batches(ds, batch_size=10, drop_remainder=True)) == []
+
+
 def test_paper_datasets_registry():
     from repro.jpeg.encoder import PAPER_DATASETS, scaled_spec
     assert set(PAPER_DATASETS) == {

@@ -1,0 +1,170 @@
+"""Lane-permutation plans (dist/plan.balance_lanes) — the skewed-batch load
+balancer built on the explicit chunk_prev/chunk_next chain adjacency.
+
+Central invariant: a lane permutation never changes the decoded output.
+Every sync schedule × backend must decode a skewed multi-restart batch
+bit-identically under balance="roundrobin"/"lpt" vs "none" (the 8-device
+mesh variant lives in tests/test_distribution.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import ParallelDecoder, build_batch_plan
+from repro.dist import plan as DP
+from repro.jpeg import codec_ref as cr
+
+from conftest import synth_image
+
+N_LANES = 8
+
+
+def _skewed_batch():
+    """One multi-restart image (many segments/sequences) + small tails."""
+    big = cr.encode_baseline(synth_image(48, 64, seed=1, noise=20.0),
+                             quality=92, restart_interval=2)
+    smalls = [cr.encode_baseline(synth_image(16, 16, seed=5 + i), quality=60)
+              for i in range(3)]
+    results = [big] + smalls
+    blobs = [r.jpeg_bytes for r in results]
+    exp = np.concatenate(
+        [cr.undiff_dc(r.image, cr.decode_coefficients(r.image))
+         for r in results])
+    return blobs, exp
+
+
+class TestPermutationParityMatrix:
+    @pytest.mark.parametrize(
+        "sync", ["jacobi", "faithful", "specmap", "sequential"])
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("balance", ["roundrobin", "lpt"])
+    def test_balanced_decode_bit_identical(self, sync, backend, balance):
+        blobs, exp = _skewed_batch()
+        dec = ParallelDecoder.from_bytes(
+            blobs, chunk_bits=128, seq_chunks=4, sync=sync, backend=backend,
+            interpret=True, balance=balance, lanes=N_LANES)
+        assert dec.plan.balance == balance
+        assert dec.plan.n_chunks % N_LANES == 0
+        out = dec.coefficients()
+        assert out.converged
+        assert np.array_equal(np.asarray(out.coeffs), exp), (
+            sync, backend, balance)
+
+
+class TestIdentityFastPath:
+    """On identity plans the static permuted=False path (positional shift /
+    direct segmented scan — the cheap mesh lowering) must match the general
+    chunk_prev/chunk_order gather forms bit for bit."""
+
+    def test_shift_and_gather_forms_agree(self):
+        import jax.numpy as jnp
+        from repro.core import decode as D
+        from repro.core.sync import chain_entries, jacobi_sync, specmap_sync
+        from repro.core.bitstream import MAX_UPM
+
+        blobs, _ = _skewed_batch()
+        plan = build_batch_plan(blobs, chunk_bits=128, seq_chunks=4)
+        dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        kw = dict(s_max=plan.s_max, min_code_bits=plan.min_code_bits)
+        for run in (
+            lambda p: jacobi_sync(dev, max_rounds=plan.n_chunks + 2,
+                                  permuted=p, **kw),
+            lambda p: specmap_sync(dev, max_upm=MAX_UPM,
+                                   max_verify=plan.n_chunks + 2,
+                                   permuted=p, **kw),
+        ):
+            fast, gen = run(False), run(True)
+            assert bool(fast.converged) and bool(gen.converged)
+            for a, b in zip(fast.exits, gen.exits):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+        exits = jacobi_sync(dev, max_rounds=plan.n_chunks + 2, **kw).exits
+        assert np.array_equal(
+            np.asarray(D.chunk_write_bases(dev, exits.n, permuted=False)),
+            np.asarray(D.chunk_write_bases(dev, exits.n, permuted=True)))
+        for a, b in zip(chain_entries(dev, exits, False),
+                        chain_entries(dev, exits, True)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestBalancedPlanInvariants:
+    def _plans(self, policy="lpt"):
+        blobs, _ = _skewed_batch()
+        plan = build_batch_plan(blobs, chunk_bits=128, seq_chunks=4)
+        return plan, DP.balance_lanes(plan, N_LANES, policy)
+
+    def test_permutation_is_a_bijection_with_inert_padding(self):
+        plan, bal = self._plans()
+        c_real, c_pad = plan.n_chunks, bal.n_chunks
+        assert bal.n_real_chunks == c_real and c_pad % N_LANES == 0
+        # lane_perm / chunk_order are inverse permutations of the padded axis
+        assert np.array_equal(bal.chunk_order[bal.lane_perm],
+                              np.arange(c_pad))
+        # every real chunk appears on exactly one lane
+        real = bal.lane_perm[bal.lane_perm < c_real]
+        assert sorted(real.tolist()) == list(range(c_real))
+        # inert lanes decode nothing, stay cold, and chain to themselves
+        inert = bal.lane_perm >= c_real
+        assert np.all(bal.chunk_limit[inert] == bal.chunk_start[inert])
+        assert np.all(bal.chunk_first[inert])
+        assert np.all(bal.chunk_seq[inert] == -1)
+        lanes = np.arange(c_pad)
+        assert np.all(bal.chunk_prev[inert] == lanes[inert])
+        assert np.all(bal.chunk_next[inert] == lanes[inert])
+
+    def test_chain_adjacency_follows_bitstream_order(self):
+        plan, bal = self._plans()
+        perm = bal.lane_perm
+        for lane in range(bal.n_chunks):
+            c = perm[lane]
+            if bal.chunk_first[lane]:
+                assert bal.chunk_prev[lane] == lane
+            else:
+                assert perm[bal.chunk_prev[lane]] == c - 1
+            nxt = bal.chunk_next[lane]
+            if nxt == lane:  # segment end (or inert)
+                assert (c + 1 >= plan.n_chunks or plan.chunk_first[c + 1]
+                        or perm[lane] >= plan.n_chunks)
+            else:
+                assert perm[nxt] == c + 1
+        # sequence roots moved with the permutation
+        assert np.array_equal(perm[bal.seq_last_chunk], plan.seq_last_chunk)
+
+    def test_sequences_stay_whole_per_mesh_lane(self):
+        plan, bal = self._plans()
+        block = bal.n_chunks // N_LANES
+        lane_of_seq = {}
+        for lane in range(bal.n_chunks):
+            q = bal.chunk_seq[lane]
+            if q < 0:
+                continue
+            d = lane // block
+            assert lane_of_seq.setdefault(int(q), d) == d, (
+                f"sequence {q} straddles mesh lanes")
+
+    def test_lpt_loads_balanced_within_one_sequence(self):
+        plan, bal = self._plans("lpt")
+        loads = DP.plan_lane_loads(bal, N_LANES)
+        assert loads.sum() == plan.n_chunks
+        # LPT guarantee: max-min load gap bounded by one sequence's chunks
+        assert loads.max() - loads.min() <= plan.seq_chunks
+        # the analytic audit matches the materialized plan
+        assert np.array_equal(loads, DP.lane_loads(plan, N_LANES, "lpt"))
+
+    def test_skew_statistics(self):
+        """The benchmark's claim in miniature: contiguous (unbalanced)
+        sequence assignment concentrates the big image; LPT does not."""
+        plan, _ = self._plans()
+        none = DP.lane_loads(plan, N_LANES, "none")
+        lpt = DP.lane_loads(plan, N_LANES, "lpt")
+        assert none.sum() == lpt.sum() == plan.n_chunks
+        assert lpt.max() - lpt.min() <= none.max() - none.min()
+
+    def test_policy_validation_and_identity(self):
+        plan, bal = self._plans()
+        with pytest.raises(ValueError, match="unknown lane balance"):
+            DP.balance_lanes(plan, N_LANES, "greedy")
+        with pytest.raises(ValueError, match="already lane-balanced"):
+            DP.balance_lanes(bal, N_LANES, "lpt")
+        assert DP.balance_lanes(plan, N_LANES, "none") is plan
+        assert DP.balance_lanes(plan, 1, "lpt") is plan
+        with pytest.raises(ValueError, match="unknown lane balance"):
+            ParallelDecoder.from_bytes(_skewed_batch()[0], balance="greedy")
