@@ -25,11 +25,14 @@ def run_rows():
         ds = load_dataset(name)
         dec = ParallelDecoder.from_bytes(ds.jpeg_bytes,
                                          chunk_bits=ds.spec.subsequence_bits)
-        plan, dev = dec.plan, dec.dev
+        # dec.dev is capacity-padded (PlanShape buckets), so stage timings
+        # use the shape's capacities — exactly what the compiled decoder
+        # runs — and the real-count write clamp rides in dev["units_end"]
+        shape, dev = dec.shape, dec.dev
 
         sync_fn = jax.jit(lambda d: jacobi_sync(
-            d, s_max=plan.s_max, min_code_bits=plan.min_code_bits,
-            max_rounds=plan.n_chunks + 2))
+            d, s_max=shape.s_max, min_code_bits=shape.min_code_bits,
+            max_rounds=shape.n_chunks + 2))
 
         def t_sync():
             jax.block_until_ready(sync_fn(dev).exits.p)
@@ -40,17 +43,16 @@ def run_rows():
         def write_fn(d, exits):
             bases = D.chunk_write_bases(d, exits.n)
             seg_end = jnp.concatenate([
-                d["seg_coeff_base"][1:],
-                jnp.asarray([plan.total_units * 64], jnp.int32)])
+                d["seg_coeff_base"][1:], d["units_end"][None]])
             write_max = seg_end[d["chunk_seg"]] - 1
             meta = D.chunk_meta(d)
-            out = jnp.zeros((plan.total_units * 64,), jnp.int32)
+            out = jnp.zeros((shape.n_units * 64,), jnp.int32)
             _, out = D.decode_span(
                 d, chain_entries(d, exits), meta["word_base"], meta["limit"],
-                meta["ts"], meta["upm"], s_max=plan.s_max,
-                min_code_bits=plan.min_code_bits, write=True, out=out,
+                meta["ts"], meta["upm"], s_max=shape.s_max,
+                min_code_bits=shape.min_code_bits, write=True, out=out,
                 write_base=bases, write_max=write_max)
-            return out.reshape(plan.total_units, 64)
+            return out.reshape(shape.n_units, 64)
 
         def t_write():
             jax.block_until_ready(write_fn(dev, res.exits))

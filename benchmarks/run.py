@@ -16,7 +16,8 @@ import sys
 
 
 def main() -> None:
-    from . import backends, breakdown, datasets, quality, skew, subseq_size
+    from . import backends, breakdown, datasets, quality, skew, stream, \
+        subseq_size
     from .common import BENCH_BACKEND, BENCH_SCALE, emit
 
     suites = {
@@ -26,6 +27,7 @@ def main() -> None:
         "subseq_size": subseq_size,  # Table II/III subsequence column
         "backends": backends,     # beyond-paper: jnp vs Pallas kernels
         "skew": skew,             # beyond-paper: lane balancing (skewed corpus)
+        "stream": stream,         # beyond-paper: compile-once steady stream
     }
     wanted = sys.argv[1:] or list(suites)
     all_rows = []

@@ -1,0 +1,93 @@
+"""Beyond-paper: steady-state streaming decode throughput (plan buckets).
+
+The deployment the ROADMAP's north star describes is a *stream*: every
+training/serving step decodes a fresh, content-distinct batch. Before the
+PlanShape/PlanData split, each fresh batch baked its words into a new
+jitted closure — one XLA compilation per step, thousands of times the
+decode cost. This suite measures the streaming behavior directly:
+
+* ``stream/bucketed`` — decode ``N_BATCHES`` distinct batches through one
+  ``JpegVisionPipeline`` with capacity bucketing on (the default).
+  ``us_per_call`` is the *median warm step* (decode + patch embed, post
+  compile); derived fields report the cold (compiling) step, the number of
+  compiles per 100 batches (the compile-once target is <= the number of
+  capacity buckets the stream spans, independent of N), and the buckets.
+* ``stream/unbucketed`` — the same stream with ``bucket=False`` (exact-fit
+  shapes, the pre-split behavior) over fewer batches: every distinct batch
+  shape compiles, so compiles-per-100 sits near 100 and the "warm" step is
+  dominated by retracing.
+
+Rows fold into the BENCH_JSON artifact in CI; the corpus is a fixed
+CI-sized synthetic stream (streaming behavior is a cache property, not a
+perf scale, so BENCH_SCALE does not apply; rows carry ``corpus=fixed``).
+The decode honors BENCH_BACKEND.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BENCH_BACKEND, emit
+
+from repro.data.jpeg_pipeline import JpegVisionPipeline
+from repro.jpeg import codec_ref as cr
+from repro.jpeg.encoder import synth_frame
+
+N_BATCHES = 24       # distinct batches in the bucketed stream
+N_UNBUCKETED = 6     # the exact-fit baseline compiles per batch: keep short
+BATCH = 4
+CHUNK_BITS = 256
+
+
+def stream_blobs(n_batches: int, batch: int = BATCH):
+    """Distinct same-geometry batches (a fixed-resolution training feed)."""
+    rng = np.random.default_rng(0)
+    out = []
+    for b in range(n_batches):
+        out.append([
+            cr.encode_baseline(
+                synth_frame(rng, 32, 32, t=0.13 * (b * batch + i)),
+                quality=80).jpeg_bytes
+            for i in range(batch)
+        ])
+    return out
+
+
+def _run_stream(batches, bucket: bool):
+    pipe = JpegVisionPipeline(patch=8, embed_dim=64, chunk_bits=CHUNK_BITS,
+                              backend=BENCH_BACKEND, bucket=bucket,
+                              decoder_cache_size=0, sync_stats=True)
+    for blobs in batches:
+        pipe.patches_for(blobs)
+    return pipe.decode_stats()
+
+
+def run_rows():
+    rows = []
+    for name, bucket, n in (("bucketed", True, N_BATCHES),
+                            ("unbucketed", False, N_UNBUCKETED)):
+        st = _run_stream(stream_blobs(n), bucket)
+        per100 = 100.0 * st["compile_count"] / max(st["batches"], 1)
+        # an unbucketed "warm" step only exists when two batches collide on
+        # an exact shape; report the cold step as the steady state then
+        warm = st["warm_step_ms"] or st["cold_step_ms"]
+        rows.append({
+            "name": f"stream/{name}",
+            "us_per_call": warm * 1e3,
+            "derived": (
+                f"cold_ms={st['cold_step_ms']:.1f}"
+                f";compiles_per_100={per100:.1f}"
+                f";batches={st['batches']};buckets={len(st['buckets'])}"
+                f";sync_rounds={st['sync_rounds']}"
+                f";transfer_saving={st['transfer_saving']:.1f}x"
+                f";corpus=fixed"
+            ),
+        })
+    return rows
+
+
+def main():
+    emit(run_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,10 @@
 """Core: the paper parallel JPEG decoding algorithm on accelerators."""
 
-from .api import DecodeOutput, ParallelDecoder, decode_batch  # noqa: F401
-from .bitstream import BatchPlan, build_batch_plan  # noqa: F401
+from .api import (DecodeOutput, DecodeProgram, ParallelDecoder,  # noqa: F401
+                  clear_decode_programs, decode_batch, decode_program,
+                  decode_program_stats, decode_programs)
+from .bitstream import (BatchPlan, PlanData, PlanShape,  # noqa: F401
+                        bucket_capacity, build_batch_plan, build_plan_data,
+                        plan_shape, split_plan)
 from .state import DecodeState  # noqa: F401
 from .sync import faithful_sync, jacobi_sync  # noqa: F401

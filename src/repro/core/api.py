@@ -19,22 +19,33 @@ coefficient write pass, and fused IDCT). Every sync schedule runs on either
 backend and the two are bit-identical; on a mesh the Pallas path runs under
 shard_map over the chunk-lane axis. ``use_kernels=True`` is the legacy
 spelling of ``backend="pallas"``.
+
+Compile-once streaming:  the compiled decoder is keyed on the batch's
+static :class:`~repro.core.bitstream.PlanShape` (capacities bucketed up a
+geometric ladder), NOT on its contents — a module-level program cache
+(:func:`decode_program`) hands every ``ParallelDecoder`` whose batch lands
+in the same (shape, sync, backend) bucket the same jitted function, and the
+batch's :class:`~repro.core.bitstream.PlanData` streams through as plain
+jit operands (the per-batch ``words`` buffer is donated). A training or
+serving stream of fresh batches therefore compiles once per bucket and
+performs zero retraces at steady state (see docs/SERVING.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import decode as D
 from ..dist import sharding as S
 from ..kernels.backend import check_backend, resolve_backend
 from ..jpeg.format import parse_jpeg, segment_byte_bounds, unstuff_scan
-from .bitstream import BatchPlan, build_batch_plan
+from .bitstream import (BatchPlan, LADDER_STEP, PlanShape, bucket_capacity,
+                        build_batch_plan, build_plan_data, plan_shape)
 from .state import DecodeState
 from .sync import SyncResult, faithful_sync, jacobi_sync, specmap_sync
 
@@ -71,8 +82,9 @@ def _lane_mesh_axis(trace_token):
     """(mesh, axis) the chunk lanes are sharded over, from a trace token.
 
     The token is :func:`repro.dist.sharding.trace_token`'s snapshot of the
-    ambient (mesh, rules) context — the same static jit key `_coeffs` is
-    cached on, so the shard_map mesh always matches the trace context.
+    ambient (mesh, rules) context — the same static jit key the compiled
+    programs are cached on, so the shard_map mesh always matches the trace
+    context.
     """
     if trace_token is None:
         return None, None
@@ -93,7 +105,7 @@ class DecodeOutput:
     plan: BatchPlan
 
 
-def _sequential_chunk_bits(unstuffed) -> int:
+def _sequential_chunk_bits(unstuffed, bucket: bool = True) -> int:
     """Chunk size that makes every entropy *segment* a single chunk.
 
     Sized from the unstuffed scans' longest segment (restart intervals
@@ -102,132 +114,324 @@ def _sequential_chunk_bits(unstuffed) -> int:
     bound, ``chunk_bits // min_code_bits + 2``) for every segment in the
     batch. ``unstuffed`` is a list of ``unstuff_scan`` results, shared with
     the plan builder so each scan is unstuffed once.
+
+    With ``bucket`` (the default) the size is rounded up the capacity
+    ladder before word alignment, so a stream of batches with drifting
+    longest-segment sizes keeps hitting the same chunk_bits — and with it
+    the same compiled-decoder bucket — instead of retracing per batch.
     """
     worst = 32
     for clean, rst_bits in unstuffed:
         bounds = segment_byte_bounds(clean, rst_bits)
         longest = max(b - a for a, b in zip(bounds, bounds[1:]))
         worst = max(worst, longest * 8)
+    if bucket:
+        worst = bucket_capacity(worst)
     return -(-worst // 32) * 32
 
 
+# ---------------------------------------------------------------------------
+# Compiled program cache: one jitted decoder per (PlanShape, sync, backend)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeProgram:
+    """A compiled decoder for one capacity bucket.
+
+    ``coeffs_fn(words, dev, trace_token)`` is the entropy stage: it takes a
+    batch's padded :class:`PlanData` operands (``words`` donated — it is
+    the one buffer that is fresh every batch) and returns capacity-sized
+    coefficients plus sync diagnostics. ``pixels_fn`` (uniform shapes only)
+    is the IDCT/color stage. Both are shared by every decoder whose batch
+    lands in this bucket; ``coeffs_traces``/``pixels_traces`` count actual
+    jax traces (incremented from inside the traced python body), which is
+    how the compile-once guarantee is asserted in tests and surfaced in
+    pipeline/benchmark stats.
+    """
+
+    shape: PlanShape
+    sync: str
+    backend: str
+    interpret: Optional[bool]
+    coeffs_fn: object = None
+    pixels_fn: object = None
+    coeffs_traces: int = 0
+    pixels_traces: int = 0
+
+    @property
+    def compiles(self) -> int:
+        return self.coeffs_traces + self.pixels_traces
+
+
+_PROGRAMS: Dict[Tuple, DecodeProgram] = {}
+_cpu_donation_warning_filtered = False
+
+
+def _filter_cpu_donation_warning() -> None:
+    """On CPU backends the donated per-batch words buffer can never be
+    consumed and jax warns once per compile — pure noise there, so filter
+    it (lazily, once, and only for CPU: on GPU/TPU donation is expected to
+    succeed and the warning must stay visible as a regression signal)."""
+    global _cpu_donation_warning_filtered
+    if not _cpu_donation_warning_filtered:
+        _cpu_donation_warning_filtered = True
+        if jax.default_backend() == "cpu":
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+
+
+def decode_program(shape: PlanShape, sync: str = "jacobi",
+                   backend: str = "jnp",
+                   interpret: Optional[bool] = None,
+                   idct_impl=None) -> DecodeProgram:
+    """The shared compiled decoder for a (shape, sync, backend) bucket.
+
+    Programs are cached at module level: a stream of distinct batches that
+    bucket to the same shape reuses one jitted function and compiles only
+    on the first batch (plus once more per distinct mesh/rules context,
+    which is part of the jit key via ``trace_token``). A custom
+    ``idct_impl`` only affects the pixel stage, so its (uncacheable —
+    identity cannot key it) program still *shares* the cached entropy
+    stage: streaming with a custom IDCT keeps the compile-once coeffs
+    path, and only the pixel jit is per-decoder.
+    """
+    assert sync in ("jacobi", "faithful", "sequential", "specmap")
+    check_backend(backend)
+    _filter_cpu_donation_warning()
+    key = (shape, sync, backend, interpret)
+    prog = _PROGRAMS.get(key)
+    if prog is None:
+        prog = _build_program(shape, sync, backend, interpret, None)
+        _PROGRAMS[key] = prog
+    if idct_impl is None:
+        return prog
+    custom = DecodeProgram(shape=shape, sync=sync, backend=backend,
+                           interpret=interpret, coeffs_fn=prog.coeffs_fn)
+    if shape.uniform:
+        custom.pixels_fn = _build_pixels_fn(shape, idct_impl, custom)
+    return custom
+
+
+def clear_decode_programs() -> None:
+    """Drop every cached compiled decoder (tests / memory pressure)."""
+    _PROGRAMS.clear()
+
+
+def decode_programs() -> List[DecodeProgram]:
+    return list(_PROGRAMS.values())
+
+
+def decode_program_stats() -> Dict:
+    """Aggregate compile counters for the decode-stats surfaces
+    (``launch/report.py``, ``benchmarks/stream.py``)."""
+    progs = decode_programs()
+    return {
+        "programs": len(progs),
+        "compiles": sum(p.compiles for p in progs),
+        "coeffs_compiles": sum(p.coeffs_traces for p in progs),
+        "pixels_compiles": sum(p.pixels_traces for p in progs),
+        "buckets": [
+            {"bucket": p.shape.label(), "sync": p.sync, "backend": p.backend,
+             "compiles": p.compiles}
+            for p in progs
+        ],
+    }
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _slice_units(coeffs: Array, n_units: int, trace_token) -> Array:
+    """Slice capacity-padded coefficients down to the real unit count,
+    keeping the unit axis sharded over the mesh (an eager out-of-jit slice
+    would gather the rows to a replicated array). ``trace_token`` keys the
+    jit cache on the ambient (mesh, rules) context exactly like the main
+    programs; ``n_units`` is constant per bucket for uniform streams, so
+    this compiles with the bucket, not with the batch."""
+    del trace_token
+    return S.shard(coeffs[:n_units], "units", None)
+
+
+def _build_program(shape: PlanShape, sync: str, backend: str,
+                   interpret: Optional[bool], idct_impl) -> DecodeProgram:
+    prog = DecodeProgram(shape=shape, sync=sync, backend=backend,
+                         interpret=interpret)
+    if idct_impl is None and backend == "pallas":
+        from ..kernels.idct.ops import idct_units
+        idct_impl = functools.partial(idct_units, interpret=interpret)
+    idct_impl = idct_impl or D.idct_units_folded
+    sh = shape
+    # static at trace time: identity plans (the default) keep the old
+    # shift/direct-scan lowerings; permuted plans use the chunk_prev /
+    # chunk_order gather forms (see core/sync.chain_entries)
+    permuted = sh.permuted
+
+    @functools.partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+    def _coeffs(words: Array, dev: Dict[str, Array], trace_token):
+        # python side effect => runs once per jax trace, never per call
+        prog.coeffs_traces += 1
+        # trace_token keys the jit cache on the ambient (mesh, rules)
+        # context that S.shard (and the Pallas shard_map path) reads at
+        # trace time
+        mesh, lane_axis = _lane_mesh_axis(trace_token)
+        dev = dict(dev, words=words)
+        dev = _shard_lanes(dev)
+        if backend == "pallas":
+            from ..kernels.huffman import ops as HK
+            decode_exits = HK.make_decode_exits(
+                s_max=sh.s_max, min_code_bits=sh.min_code_bits,
+                chunk_bits=sh.chunk_bits, interpret=interpret,
+                mesh=mesh, lane_axis=lane_axis,
+            )
+        else:
+            decode_exits = D.make_decode_exits(
+                s_max=sh.s_max, min_code_bits=sh.min_code_bits,
+            )
+        # loop bounds are *capacities*: inert padding lanes decode nothing
+        # and are stable from round zero, so convergence is driven by the
+        # real lanes exactly as in the exact-fit program
+        if sync == "specmap":
+            from .bitstream import MAX_UPM
+            # specmap's round counter starts at max_upm (the hypothesis
+            # decodes count as rounds), so the verify budget must add it on
+            # top of the worst-case truth-propagation chain — n_chunks + 2
+            # alone starved verification by max_upm rounds and could return
+            # an unconverged (wrong) parse on long single-segment batches
+            res = specmap_sync(
+                dev, s_max=sh.s_max, min_code_bits=sh.min_code_bits,
+                max_upm=MAX_UPM, max_verify=sh.n_chunks + MAX_UPM + 2,
+                decode_exits=decode_exits, permuted=permuted,
+            )
+        elif sync == "jacobi":
+            res = jacobi_sync(
+                dev, s_max=sh.s_max, min_code_bits=sh.min_code_bits,
+                max_rounds=sh.n_chunks + 2, decode_exits=decode_exits,
+                permuted=permuted,
+            )
+        elif sync == "faithful":
+            res = faithful_sync(
+                dev, s_max=sh.s_max, min_code_bits=sh.min_code_bits,
+                seq_chunks=sh.seq_chunks, max_outer=sh.n_sequences + 2,
+                decode_exits=decode_exits, permuted=permuted,
+            )
+        else:  # sequential: one chunk per segment -> cold start is exact
+            exits = decode_exits(dev, DecodeState.cold(dev["chunk_start"]))
+            res = SyncResult(exits, jnp.asarray(1), jnp.asarray(True))
+
+        # Output placement (Alg. 1 lines 7-8) + write pass (lines 9-15).
+        # The final segment's write clamp comes from the *traced* scalar
+        # units_end (the real batch's coefficient count) — pad segments
+        # carry the same value in seg_coeff_base, so real lanes see
+        # identical clamps whether or not the segment axis is padded.
+        bases = D.chunk_write_bases(dev, res.exits.n, permuted=permuted)
+        seg_end = jnp.concatenate([
+            dev["seg_coeff_base"][1:],
+            dev["units_end"][None],
+        ])
+        write_max = seg_end[dev["chunk_seg"]] - 1
+        entries = _entries_from(dev, res.exits, permuted)
+        out = jnp.zeros((sh.n_units * 64,), jnp.int32)
+        if backend == "pallas":
+            _, out = HK.decode_coeffs(
+                dev, entries, out=out, write_base=bases,
+                write_max=write_max, s_max=sh.s_max,
+                min_code_bits=sh.min_code_bits, chunk_bits=sh.chunk_bits,
+                interpret=interpret, mesh=mesh, lane_axis=lane_axis,
+            )
+        else:
+            meta = D.chunk_meta(dev)
+            _, out = D.decode_span(
+                dev, entries, meta["word_base"], meta["limit"],
+                meta["ts"], meta["upm"], s_max=sh.s_max,
+                min_code_bits=sh.min_code_bits, write=True, out=out,
+                write_base=bases, write_max=write_max,
+            )
+        coeffs = out.reshape(sh.n_units, 64)
+        coeffs = S.shard(D.undiff_dc(dev, coeffs), "units", None)
+        return coeffs, res.rounds, res.converged
+
+    prog.coeffs_fn = _coeffs
+
+    if sh.uniform:
+        prog.pixels_fn = _build_pixels_fn(sh, idct_impl, prog)
+    return prog
+
+
+def _build_pixels_fn(sh: PlanShape, idct_impl, prog: DecodeProgram):
+    """The jitted IDCT/color stage for one shape (``prog`` receives the
+    trace counts — the shared program normally, a per-decoder wrapper when
+    a custom ``idct_impl`` bypasses the cache)."""
+    g = sh.geometry
+    u_real = sh.n_images * g.n_units
+    comp_grid = tuple((g.mcus_y * g.comp_v[ci], g.mcus_x * g.comp_h[ci])
+                      for ci in range(g.n_components))
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def _pixels(pixdev: Dict[str, Array], pix_layout, coeffs: Array,
+                trace_token):
+        prog.pixels_traces += 1
+        del trace_token
+        coeffs = S.shard(coeffs, "units", None)
+        pixels = idct_impl(coeffs, pixdev["m_matrices"],
+                           pixdev["unit_mrow"][:u_real])
+        planes = D.assemble_planes(
+            pixels, sh.n_images, pix_layout["comp_unit_idx"],
+            pix_layout["comp_block_idx"], comp_grid,
+        )
+        rgb = D.upsample_color(
+            planes, g.comp_h, g.comp_v, g.h_max, g.v_max,
+            g.height, g.width,
+        )
+        return planes, rgb
+
+    return _pixels
+
+
 class ParallelDecoder:
-    """A compiled decoder for one batch *shape* (plan)."""
+    """A decoder handle for one batch: shared compiled program + this
+    batch's padded plan data.
+
+    Construction is cheap after the first batch of a bucket — the jitted
+    functions come from the module-level :func:`decode_program` cache keyed
+    on the batch's (bucketed) :class:`PlanShape`, so a stream of distinct
+    batches compiles once per (bucket, sync, backend) and then only moves
+    data. ``bucket=False`` pins the exact-fit shape (no padding), which is
+    the pre-bucketing behavior and the oracle the padding tests compare
+    against.
+    """
 
     def __init__(self, plan: BatchPlan, sync: str = "jacobi",
                  idct_impl=None, backend: str = "jnp",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 bucket: bool = True, ladder_step: float = LADDER_STEP):
         assert sync in ("jacobi", "faithful", "sequential", "specmap")
         check_backend(backend)
         self.plan = plan
         self.sync = sync
         self.backend = backend
         self.interpret = interpret
-        self.dev = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
-        if idct_impl is None and backend == "pallas":
-            from ..kernels.idct.ops import idct_units
-            idct_impl = functools.partial(idct_units, interpret=interpret)
-        self._idct_impl = idct_impl or D.idct_units_folded
-        p = plan
+        self.shape = plan_shape(plan, bucket=bucket, step=ladder_step)
+        self.data = build_plan_data(plan, self.shape)
+        self.program = decode_program(self.shape, sync=sync, backend=backend,
+                                      interpret=interpret,
+                                      idct_impl=idct_impl)
+        # metadata operands live on device for the handle's lifetime; the
+        # words buffer intentionally does NOT (each decode call uploads a
+        # fresh copy and donates it to the compiled program)
+        self._dev_rest = {k: jnp.asarray(v)
+                          for k, v in self.data.arrays.items()}
+        if plan.uniform:
+            self._pixdev = {"m_matrices": self._dev_rest["m_matrices"],
+                            "unit_mrow": self._dev_rest["unit_mrow"]}
+            self._pix_layout = {
+                "comp_unit_idx": [jnp.asarray(a) for a in plan.comp_unit_idx],
+                "comp_block_idx": [jnp.asarray(a)
+                                   for a in plan.comp_block_idx],
+            }
 
-        # static at trace time: identity plans (the default) keep the old
-        # shift/direct-scan lowerings; permuted plans use the chunk_prev /
-        # chunk_order gather forms (see core/sync.chain_entries)
-        permuted = plan.balance != "none"
-
-        @functools.partial(jax.jit, static_argnums=(1,))
-        def _coeffs(dev: Dict[str, Array], trace_token):
-            # trace_token keys the jit cache on the ambient (mesh, rules)
-            # context that S.shard (and the Pallas shard_map path) reads at
-            # trace time
-            mesh, lane_axis = _lane_mesh_axis(trace_token)
-            dev = _shard_lanes(dev)
-            if backend == "pallas":
-                from ..kernels.huffman import ops as HK
-                decode_exits = HK.make_decode_exits(
-                    s_max=p.s_max, min_code_bits=p.min_code_bits,
-                    chunk_bits=p.chunk_bits, interpret=interpret,
-                    mesh=mesh, lane_axis=lane_axis,
-                )
-            else:
-                decode_exits = D.make_decode_exits(
-                    s_max=p.s_max, min_code_bits=p.min_code_bits,
-                )
-            if sync == "specmap":
-                from .bitstream import MAX_UPM
-                res = specmap_sync(
-                    dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
-                    max_upm=MAX_UPM, max_verify=p.n_chunks + 2,
-                    decode_exits=decode_exits, permuted=permuted,
-                )
-            elif sync == "jacobi":
-                res = jacobi_sync(
-                    dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
-                    max_rounds=p.n_chunks + 2, decode_exits=decode_exits,
-                    permuted=permuted,
-                )
-            elif sync == "faithful":
-                res = faithful_sync(
-                    dev, s_max=p.s_max, min_code_bits=p.min_code_bits,
-                    seq_chunks=p.seq_chunks, max_outer=p.n_sequences + 2,
-                    decode_exits=decode_exits, permuted=permuted,
-                )
-            else:  # sequential: one chunk per segment -> cold start is exact
-                exits = decode_exits(dev, DecodeState.cold(dev["chunk_start"]))
-                res = SyncResult(exits, jnp.asarray(1), jnp.asarray(True))
-
-            # Output placement (Alg. 1 lines 7-8) + write pass (lines 9-15).
-            bases = D.chunk_write_bases(dev, res.exits.n, permuted=permuted)
-            seg_end = jnp.concatenate([
-                dev["seg_coeff_base"][1:],
-                jnp.asarray([p.total_units * 64], dtype=jnp.int32),
-            ])
-            write_max = seg_end[dev["chunk_seg"]] - 1
-            entries = _entries_from(dev, res.exits, permuted)
-            out = jnp.zeros((p.total_units * 64,), jnp.int32)
-            if backend == "pallas":
-                _, out = HK.decode_coeffs(
-                    dev, entries, out=out, write_base=bases,
-                    write_max=write_max, s_max=p.s_max,
-                    min_code_bits=p.min_code_bits, chunk_bits=p.chunk_bits,
-                    interpret=interpret, mesh=mesh, lane_axis=lane_axis,
-                )
-            else:
-                meta = D.chunk_meta(dev)
-                _, out = D.decode_span(
-                    dev, entries, meta["word_base"], meta["limit"],
-                    meta["ts"], meta["upm"], s_max=p.s_max,
-                    min_code_bits=p.min_code_bits, write=True, out=out,
-                    write_base=bases, write_max=write_max,
-                )
-            coeffs = out.reshape(p.total_units, 64)
-            coeffs = S.shard(D.undiff_dc(dev, coeffs), "units", None)
-            return coeffs, res.rounds, res.converged
-
-        self._coeffs_fn = _coeffs
-
-        if p.uniform:
-            g = p.geometry
-            comp_unit_idx = [jnp.asarray(a) for a in p.comp_unit_idx]
-            comp_block_idx = [jnp.asarray(a) for a in p.comp_block_idx]
-
-            @functools.partial(jax.jit, static_argnums=(2,))
-            def _pixels(dev: Dict[str, Array], coeffs: Array, trace_token):
-                del trace_token
-                coeffs = S.shard(coeffs, "units", None)
-                pix = self._idct_impl(coeffs, dev["m_matrices"], dev["unit_mrow"])
-                planes = D.assemble_planes(
-                    pix, p.n_images, comp_unit_idx, comp_block_idx, p.comp_grid
-                )
-                rgb = D.upsample_color(
-                    planes, g.comp_h, g.comp_v, g.h_max, g.v_max,
-                    g.height, g.width,
-                )
-                return planes, rgb
-
-            self._pixels_fn = _pixels
-        else:
-            self._pixels_fn = None
+    @property
+    def dev(self) -> Dict[str, Array]:
+        """The full device pytree (capacity-padded), words included —
+        introspection/benchmark surface, not the hot path."""
+        return dict(self._dev_rest, words=jnp.asarray(self.data.words))
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -237,7 +441,8 @@ class ParallelDecoder:
                    backend: Optional[str] = None,
                    interpret: Optional[bool] = None,
                    balance: str = "none",
-                   lanes: Optional[int] = None) -> "ParallelDecoder":
+                   lanes: Optional[int] = None,
+                   bucket: bool = True) -> "ParallelDecoder":
         """Parse, plan, and compile a decoder for one batch.
 
         ``balance`` selects the plan-time lane partitioner
@@ -246,6 +451,10 @@ class ParallelDecoder:
         mesh lanes (default: ``jax.device_count()``) so a skewed batch does
         not concentrate one image's work on one device. Bit-identical to
         ``"none"`` on every schedule and backend.
+
+        ``bucket`` (default) rounds the plan's capacities up the geometric
+        ladder so a stream of distinct batches shares compiled programs;
+        ``bucket=False`` compiles for the exact batch extents.
         """
         from ..dist import plan as DP
         DP.check_balance(balance)
@@ -254,7 +463,7 @@ class ParallelDecoder:
         unstuffed = None
         if sync == "sequential":
             unstuffed = [unstuff_scan(img.scan_data) for img in images]
-            chunk_bits = _sequential_chunk_bits(unstuffed)
+            chunk_bits = _sequential_chunk_bits(unstuffed, bucket=bucket)
         plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
                                 seq_chunks=seq_chunks, parsed=images,
                                 unstuffed=unstuffed)
@@ -262,12 +471,20 @@ class ParallelDecoder:
             n_lanes = int(lanes) if lanes is not None else jax.device_count()
             plan = DP.balance_lanes(plan, n_lanes, balance)
         return cls(plan, sync=sync, idct_impl=idct_impl, backend=backend,
-                   interpret=interpret)
+                   interpret=interpret, bucket=bucket)
 
     # -- execution ------------------------------------------------------------
     def coefficients(self) -> DecodeOutput:
-        coeffs, rounds, conv = self._coeffs_fn(self.dev, S.trace_token())
-        return DecodeOutput(coeffs, None, None, int(rounds), bool(conv), self.plan)
+        # numpy in => jit transfers a fresh device buffer it may donate;
+        # the capacity-sized output is sliced to the real unit count
+        # host-side (a python int, so no retrace)
+        coeffs, rounds, conv = self.program.coeffs_fn(
+            self.data.words, self._dev_rest, S.trace_token())
+        if coeffs.shape[0] != self.plan.total_units:
+            coeffs = _slice_units(coeffs, self.plan.total_units,
+                                  S.trace_token())
+        return DecodeOutput(coeffs, None, None, int(rounds), bool(conv),
+                            self.plan)
 
     def decode(self, emit: str = "rgb") -> DecodeOutput:
         out = self.coefficients()
@@ -278,7 +495,8 @@ class ParallelDecoder:
                 "pixel stage requires a geometry-uniform batch; decode images "
                 "with mixed geometry via bucketing in repro.data.jpeg_pipeline"
             )
-        planes, rgb = self._pixels_fn(self.dev, out.coeffs, S.trace_token())
+        planes, rgb = self.program.pixels_fn(
+            self._pixdev, self._pix_layout, out.coeffs, S.trace_token())
         return dataclasses.replace(
             out, planes=planes, rgb=rgb if emit == "rgb" else None
         )
@@ -330,6 +548,7 @@ def decode_batch(
     use_kernels: bool = False,
     interpret: Optional[bool] = None,
     balance: str = "none",
+    bucket: bool = True,
 ) -> DecodeOutput:
     """One-shot convenience wrapper (builds the plan + compiles + decodes).
 
@@ -344,12 +563,16 @@ def decode_batch(
     partitioner over the mesh's device count, so a skewed batch (one big
     JPEG + many small ones) spreads its sequences across every device
     instead of concentrating them in bitstream order. Also bit-identical.
+
+    ``bucket`` pads the plan to ladder capacities so repeated calls with
+    similar-sized batches reuse the module-level compiled-program cache.
     """
     dec = ParallelDecoder.from_bytes(
         blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync,
         backend=backend, use_kernels=use_kernels, interpret=interpret,
         balance=balance,
         lanes=(mesh.devices.size if mesh is not None else None),
+        bucket=bucket,
     )
     if mesh is None:
         return dec.decode(emit=emit)

@@ -49,7 +49,7 @@ def folded_idct_matrix(quant_natural: np.ndarray) -> np.ndarray:
 # Plan dataclass
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ImageGeometry:
     width: int
     height: int
@@ -147,6 +147,13 @@ class BatchPlan:
     comp_block_idx: Optional[List[np.ndarray]]  # per comp: (Uc,) raster block ids
     comp_grid: Optional[List[Tuple[int, int]]]  # per comp: (blocks_y, blocks_x)
 
+    # --- lane layout -----------------------------------------------------------
+    # Mesh-lane blocks the lane axis is laid out for: balance_lanes produces
+    # n_lanes equal contiguous blocks of whole sequences; identity plans have
+    # a single block. Capacity padding (build_plan_data) pads each block
+    # independently so the per-device layout survives bucketing.
+    n_lanes: int = 1
+
     def device_arrays(self) -> Dict[str, np.ndarray]:
         """The pytree of arrays shipped to the device (via jnp.asarray)."""
         return {
@@ -179,6 +186,280 @@ class BatchPlan:
     @property
     def compressed_bits(self) -> int:
         return int(self.seg_nbits.sum())
+
+
+# ---------------------------------------------------------------------------
+# Static plan geometry (PlanShape) vs streamed plan contents (PlanData)
+# ---------------------------------------------------------------------------
+#
+# A `BatchPlan` mixes two very different kinds of information: *geometry*
+# (array extents, loop bounds — everything a compiler must specialize on)
+# and *contents* (the compressed words and metadata tables of one concrete
+# batch). Baking both into a jitted closure forces one compilation per
+# batch, which a training/serving stream of fresh batches turns into a
+# recompile on every step. The split below makes geometry a small, hashable
+# `PlanShape` and contents a `PlanData` of numpy arrays padded to the
+# shape's capacities, so a compiled decoder keyed on the shape can stream
+# arbitrary batches through as plain jit operands.
+#
+# Capacities are *bucketed*: each extent is rounded up a geometric ladder
+# (x LADDER_STEP per rung), so batches of similar compressed size collapse
+# onto one shape and the number of distinct compilations a stream can ever
+# trigger is logarithmic in the size range, not linear in the batch count.
+#
+# Padding is bit-exact by construction (tests/test_plan_buckets.py):
+#   words     : padded with a copy of the last real word — exactly the value
+#               the exact-fit decode reads there anyway (out-of-bounds jnp
+#               gathers clamp to the final element), so even speculative
+#               garbage decoding past the stream end sees identical bits;
+#   segments  : zero-length pads (nbits 0) whose seg_coeff_base is the real
+#               coefficient end, so the last real segment's write clamp is
+#               unchanged ("units_end" ships as a traced scalar for the
+#               exact-capacity case with no pad segment);
+#   chunks    : inert lanes exactly like balance_lanes padding (start ==
+#               limit == 0, chunk_first, chunk_seq == -1, self-chained),
+#               inserted per mesh-lane block so balanced layouts survive;
+#   units     : pad units are segment-firsts of component 0 with zero
+#               coefficients — the forward segmented scans (write bases,
+#               DC undiff) never let them perturb the real prefix.
+
+LADDER_STEP = 1.3
+
+
+def bucket_capacity(n: int, step: float = LADDER_STEP) -> int:
+    """Smallest rung of the geometric capacity ladder that is >= ``n``.
+
+    The ladder is the integer sequence 1, 2, 3, 4, 6, 8, 11, ... obtained
+    by repeatedly multiplying by ``step`` and rounding up (always advancing
+    by at least 1). Rounding capacities up this ladder bounds padding waste
+    by ``step`` while collapsing a continuum of batch sizes onto a
+    logarithmic number of compile keys.
+    """
+    if n <= 0:
+        return 1
+    c = 1
+    while c < n:
+        c = max(c + 1, int(np.ceil(c * step)))
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanShape:
+    """The static compile key of a batch plan: pure python ints/bools.
+
+    Two batches with equal shapes run through the same compiled decoder;
+    everything here is either a capacity (an array extent the data is
+    padded to) or a trace-time constant (loop bounds, lane layout, pixel
+    geometry). Hashable by construction — it keys the program cache in
+    :mod:`repro.core.api`.
+    """
+
+    # trace-time constants
+    chunk_bits: int
+    seq_chunks: int
+    s_max: int
+    min_code_bits: int
+    n_lanes: int                 # mesh-lane blocks of the lane axis
+    permuted: bool               # lane axis is a balance_lanes permutation
+    # capacities (array extents; actual counts ride in PlanData)
+    n_words: int
+    n_luts: int
+    n_tablesets: int
+    n_matrices: int
+    n_segments: int
+    n_chunks: int                # lane capacity = n_lanes * block capacity
+    n_sequences: int
+    n_units: int
+    # pixel stage (uniform batches decode to fixed-shape planes)
+    n_images: int
+    uniform: bool
+    geometry: Optional[ImageGeometry]
+
+    @property
+    def block(self) -> int:
+        return self.n_chunks // self.n_lanes
+
+    def label(self) -> str:
+        """Compact human-readable bucket id for logs/stats."""
+        geo = (f"{self.geometry.width}x{self.geometry.height}"
+               if self.geometry is not None else "mixed")
+        return (f"b{self.n_images}:{geo}:w{self.n_words}:s{self.n_segments}"
+                f":c{self.n_lanes}x{self.block}:q{self.n_sequences}"
+                f":u{self.n_units}:cb{self.chunk_bits}")
+
+
+def plan_shape(plan: BatchPlan, bucket: bool = True,
+               step: float = LADDER_STEP) -> PlanShape:
+    """The (optionally bucketed) PlanShape of a BatchPlan.
+
+    ``bucket=False`` returns the exact-fit shape (capacity == actual count
+    everywhere); padding against it is the identity, which is the oracle
+    the bucketing tests compare against.
+    """
+    cap = (lambda n: bucket_capacity(n, step)) if bucket else (lambda n: n)
+    assert plan.n_chunks % plan.n_lanes == 0
+    if plan.balance == "none":
+        assert plan.n_lanes == 1, "identity plans are single-block"
+    block_cap = cap(plan.n_chunks // plan.n_lanes)
+    return PlanShape(
+        chunk_bits=plan.chunk_bits,
+        seq_chunks=plan.seq_chunks,
+        s_max=plan.s_max,
+        min_code_bits=plan.min_code_bits,
+        n_lanes=plan.n_lanes,
+        permuted=plan.balance != "none",
+        n_words=cap(len(plan.words)),
+        n_luts=cap(plan.luts.shape[0]),
+        n_tablesets=cap(plan.ts_upm.shape[0]),
+        n_matrices=cap(plan.m_matrices.shape[0]),
+        n_segments=cap(plan.n_segments),
+        n_chunks=plan.n_lanes * block_cap,
+        n_sequences=cap(plan.n_sequences),
+        n_units=cap(plan.total_units),
+        n_images=plan.n_images,
+        uniform=plan.uniform,
+        geometry=plan.geometry,
+    )
+
+
+@dataclasses.dataclass
+class PlanData:
+    """One batch's decoder operands, padded to a PlanShape's capacities.
+
+    ``arrays`` is the device metadata pytree (the jit operands); ``words``
+    ships separately so the caller can donate the one buffer that is fresh
+    every batch. Actual (unpadded) counts ride along as host ints — the
+    only one the compiled program needs, ``total_units * 64``, is also in
+    ``arrays`` as the traced scalar ``units_end`` (the write clamp of the
+    final real segment when no pad segment exists to carry it).
+    """
+
+    shape: PlanShape
+    words: np.ndarray            # (shape.n_words,) uint32, donated operand
+    arrays: Dict[str, np.ndarray]
+    # actual counts (host-side; slicing/stats, never trace operands)
+    n_words: int
+    n_segments: int
+    n_chunks: int
+    n_sequences: int
+    total_units: int
+
+
+def build_plan_data(plan: BatchPlan, shape: PlanShape) -> PlanData:
+    """Pad a BatchPlan's device arrays to ``shape``'s capacities.
+
+    Raises ``ValueError`` if the plan does not fit the shape (any actual
+    count above capacity, or a trace-time constant mismatch).
+    """
+    statics = dict(chunk_bits=plan.chunk_bits, seq_chunks=plan.seq_chunks,
+                   s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+                   n_lanes=plan.n_lanes, permuted=plan.balance != "none",
+                   n_images=plan.n_images, uniform=plan.uniform,
+                   geometry=plan.geometry)
+    for k, v in statics.items():
+        if getattr(shape, k) != v:
+            raise ValueError(f"plan/shape mismatch on static {k}: "
+                             f"{v!r} != {getattr(shape, k)!r}")
+    counts = dict(n_words=len(plan.words), n_luts=plan.luts.shape[0],
+                  n_tablesets=plan.ts_upm.shape[0],
+                  n_matrices=plan.m_matrices.shape[0],
+                  n_segments=plan.n_segments, n_chunks=plan.n_chunks,
+                  n_sequences=plan.n_sequences, n_units=plan.total_units)
+    for k, v in counts.items():
+        if v > getattr(shape, k):
+            raise ValueError(f"plan does not fit shape: {k}={v} exceeds "
+                             f"capacity {getattr(shape, k)}")
+
+    def pad1(a: np.ndarray, n: int, fill) -> np.ndarray:
+        a = np.asarray(a)
+        out = np.full((n,) + a.shape[1:], fill, dtype=a.dtype)
+        out[: len(a)] = a
+        return out
+
+    units_end = plan.total_units * 64
+
+    # words: pad with the final real word — the exact value out-of-bounds
+    # gathers clamp to in the exact-fit plan, so even the stream-tail
+    # speculative decode is bit-identical under padding
+    words = pad1(plan.words, shape.n_words, plan.words[-1])
+
+    # lane axis: pad each of the plan's n_lanes blocks to the shape's block
+    # capacity with inert lanes (the balance_lanes padding contract)
+    block = plan.n_chunks // plan.n_lanes
+    block_cap = shape.block
+    c_cap = shape.n_chunks
+    old = np.arange(plan.n_chunks, dtype=np.int64)
+    relane = ((old // block) * block_cap + (old % block)).astype(np.int64)
+    inert = np.ones(c_cap, dtype=bool)
+    inert[relane] = False
+    lanes = np.arange(c_cap, dtype=np.int32)
+
+    def lane_ext(src: np.ndarray, fill) -> np.ndarray:
+        src = np.asarray(src)
+        out = np.full(c_cap, fill, dtype=src.dtype)
+        out[relane] = src
+        return out
+
+    chunk_prev = lanes.copy()
+    chunk_prev[relane] = relane[np.asarray(plan.chunk_prev, np.int64)]
+    chunk_next = lanes.copy()
+    chunk_next[relane] = relane[np.asarray(plan.chunk_next, np.int64)]
+    # lane_perm stays a bijection lane <-> bitstream chunk id: mapped lanes
+    # keep their ids, fresh inert lanes take the new ids [n_chunks, c_cap)
+    lane_perm = np.empty(c_cap, dtype=np.int32)
+    lane_perm[relane] = plan.lane_perm
+    lane_perm[inert] = np.arange(plan.n_chunks, c_cap, dtype=np.int32)
+    chunk_order = np.empty(c_cap, dtype=np.int32)
+    chunk_order[lane_perm] = lanes
+    # pad sequences point at the last real sequence's final chunk, whose
+    # chunk_next is itself (segment end) — faithful_sync sees a boundary
+    # that never needs syncing
+    seq_last = relane[np.asarray(plan.seq_last_chunk, np.int64)]
+    seq_last_chunk = pad1(seq_last.astype(np.int32), shape.n_sequences,
+                          np.int32(seq_last[-1]))
+
+    arrays = {
+        "luts": pad1(plan.luts, shape.n_luts, 0),
+        "unit_lut_row": pad1(plan.unit_lut_row, shape.n_tablesets, 0),
+        "unit_comp_map": pad1(plan.unit_comp_map, shape.n_tablesets, 0),
+        "ts_upm": pad1(plan.ts_upm, shape.n_tablesets, 1),
+        "seg_word_base": pad1(plan.seg_word_base, shape.n_segments, 0),
+        "seg_nbits": pad1(plan.seg_nbits, shape.n_segments, 0),
+        "seg_tableset": pad1(plan.seg_tableset, shape.n_segments, 0),
+        "seg_coeff_base": pad1(plan.seg_coeff_base.astype(np.int32),
+                               shape.n_segments, np.int32(units_end)),
+        "chunk_seg": lane_ext(plan.chunk_seg, 0),
+        "chunk_start": lane_ext(plan.chunk_start, 0),
+        "chunk_limit": lane_ext(plan.chunk_limit, 0),
+        "chunk_first": lane_ext(plan.chunk_first, True),
+        "chunk_seq": lane_ext(plan.chunk_seq, -1),
+        "chunk_seq_first": lane_ext(plan.chunk_seq_first, True),
+        "chunk_prev": chunk_prev.astype(np.int32),
+        "chunk_next": chunk_next.astype(np.int32),
+        "lane_perm": lane_perm,
+        "chunk_order": chunk_order,
+        "seq_last_chunk": seq_last_chunk,
+        "unit_comp": pad1(plan.unit_comp, shape.n_units, 0),
+        "unit_seg_first": pad1(plan.unit_seg_first, shape.n_units, True),
+        "unit_mrow": pad1(plan.unit_mrow, shape.n_units, 0),
+        "m_matrices": pad1(plan.m_matrices, shape.n_matrices, 0.0),
+        # scalar actual count as a traced operand: the dense-coefficient end
+        # of the real batch (write clamp of the final real segment)
+        "units_end": np.asarray(units_end, dtype=np.int32),
+    }
+    return PlanData(
+        shape=shape, words=words, arrays=arrays,
+        n_words=len(plan.words), n_segments=plan.n_segments,
+        n_chunks=plan.n_chunks, n_sequences=plan.n_sequences,
+        total_units=plan.total_units,
+    )
+
+
+def split_plan(plan: BatchPlan, bucket: bool = True,
+               step: float = LADDER_STEP) -> Tuple[PlanShape, PlanData]:
+    """The compile-once decomposition: (static shape, streamed data)."""
+    shape = plan_shape(plan, bucket=bucket, step=step)
+    return shape, build_plan_data(plan, shape)
 
 
 # ---------------------------------------------------------------------------

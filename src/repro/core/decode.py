@@ -209,9 +209,11 @@ def chunk_write_bases(dev, exit_n: jnp.ndarray, permuted: bool = True):
     be permuted by a lane-balance plan, so gather ``n`` into chunk order
     via ``chunk_order``, scan, and gather the bases back to lanes via
     ``lane_perm``. Inert padding chunks order after every real chunk and
-    are segment-firsts, so they contribute nothing. ``permuted=False``
-    (static, for identity plans) skips both gathers and scans the sharded
-    lane order directly.
+    are segment-firsts, so they contribute nothing — this holds for both
+    balance_lanes padding and the capacity padding of a bucketed
+    ``PlanData`` (whose fresh inert lanes take bitstream ids past every
+    real id). ``permuted=False`` (static, for identity plans) skips both
+    gathers and scans the sharded lane order directly.
     """
     if permuted:
         order = dev["chunk_order"]   # bitstream chunk id -> lane
@@ -228,7 +230,13 @@ def chunk_write_bases(dev, exit_n: jnp.ndarray, permuted: bool = True):
 # ---------------------------------------------------------------------------
 
 def undiff_dc(dev, coeffs: jnp.ndarray, n_components: int = 3) -> jnp.ndarray:
-    """Reverse DC prediction over the flat (U, 64) zig-zag coefficient array."""
+    """Reverse DC prediction over the flat (U, 64) zig-zag coefficient array.
+
+    Capacity-safe: pad units (bucketed plans) are flagged segment-first
+    with zero coefficients and sit after every real unit, so the forward
+    segmented scans leave the real prefix bit-identical to the exact-fit
+    array.
+    """
     dc = coeffs[:, 0]
     first = dev["unit_seg_first"]
     total = jnp.zeros_like(dc)

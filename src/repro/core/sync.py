@@ -25,6 +25,17 @@ callable with signature ``fn(dev, entry, idx=None) -> DecodeState`` (see
 reference; ``repro.kernels.huffman.ops.make_decode_exits`` supplies the
 Pallas kernel — the schedules are backend-agnostic and the two backends
 must agree bit-for-bit on every schedule (asserted in tests).
+
+Padded-lane convergence: every schedule also tolerates capacity padding
+(``core/bitstream.PlanData``). Inert lanes (start == limit, chunk_first,
+chunk_seq == -1, self-chained) decode nothing and are a fixed point of the
+chain recurrence from round zero — ``chain_entries`` keeps them cold, the
+fixed-point predicates see them as already-stable, and ``faithful_sync``
+boundary roots duplicated into pad sequence slots start (and stay)
+``seq_synced`` because their ``chunk_next`` is themselves. The loop bounds
+(``max_rounds`` / ``max_verify`` / ``max_outer``) may therefore safely be
+*capacities* rather than actual counts — the compile-once program cache in
+``core/api.py`` relies on exactly this.
 """
 from __future__ import annotations
 

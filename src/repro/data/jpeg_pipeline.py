@@ -11,19 +11,31 @@ Pipeline: jpeg bytes --(host: parse+frame)--> device plan
 
 The host work is exactly the paper's host share (header parse + subsequence
 framing); pixels never exist host-side.
+
+Streaming compilation: compiled decode programs live in the module-level
+per-bucket cache (:func:`repro.core.api.decode_program`, keyed on the
+batch's capacity-bucketed ``PlanShape``), NOT in this pipeline — a stream
+of fresh batches compiles once per bucket and then only moves data. The
+pipeline's own ``_decoders`` LRU caches per-*batch* handles (parsed plan +
+uploaded metadata arrays), which only matters when the same byte-identical
+batch repeats; ``decoder_cache_size=0`` disables that handle cache entirely
+without losing the shared compiled programs. :meth:`decode_stats` surfaces
+the streaming counters (compiles, warm-step ms, active bucket, ...) for
+``launch/report.py`` and ``benchmarks/stream.py``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import hashlib
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import ParallelDecoder, build_batch_plan
+from ..core import ParallelDecoder
 from ..jpeg.encoder import Dataset
 
 
@@ -33,6 +45,10 @@ class JpegPipelineStats:
     decoded_mb: float
     n_images: int
     sync_rounds: int
+    # streaming decode stats (compile-once observability)
+    decode_ms: float = 0.0        # wall ms of this batch's decode+embed
+    compiled: bool = False        # this batch traced a decode program
+    bucket: str = ""              # PlanShape label of the batch's bucket
 
     @property
     def transfer_saving(self) -> float:
@@ -46,7 +62,8 @@ class JpegVisionPipeline:
                  chunk_bits: int = 1024, sync: str = "jacobi",
                  use_kernels: bool = False, backend: Optional[str] = None,
                  seed: int = 0, mesh=None, balance: str = "none",
-                 decoder_cache_size: int = 16):
+                 decoder_cache_size: int = 16, bucket: bool = True,
+                 sync_stats: bool = False):
         self.patch = patch
         self.embed_dim = embed_dim
         self.chunk_bits = chunk_bits
@@ -59,25 +76,44 @@ class JpegVisionPipeline:
         # lanes over the mesh's devices at plan time (bit-identical)
         self.mesh = mesh
         self.balance = balance
+        # bucket=False pins exact-fit plan shapes (one compile per distinct
+        # batch geometry — the pre-streaming behavior, kept for A/B runs)
+        self.bucket = bucket
+        # sync_stats=True blocks on each batch's tokens so decode_ms is the
+        # true device wall time (benchmarks/dry-runs); the default keeps
+        # dispatch asynchronous — the host overlaps the next batch's
+        # parse/plan with device decode — and decode_ms then measures only
+        # the host-side dispatch cost
+        self.sync_stats = sync_stats
         rng = np.random.default_rng(seed)
         # stub patch-embedding projection (fixed; a real run would train it)
         self.w_embed = jnp.asarray(
             rng.normal(0, 0.02, (patch * patch * 3, embed_dim)),
             dtype=jnp.bfloat16)
-        # LRU: each entry pins the batch's device words + a compiled
-        # decoder, so an unbounded content-keyed cache would grow with
-        # every distinct batch a training stream produces
+        # LRU of per-batch decoder *handles* (host plan + device metadata).
+        # Compiled programs live in the shared per-bucket cache in
+        # repro.core.api, so eviction here never discards a compilation —
+        # it only drops one batch's pinned device arrays. Size 0 turns the
+        # handle cache off: every call builds (and returns) a fresh,
+        # fully usable handle and pins nothing afterwards.
         if decoder_cache_size < 0:
             raise ValueError(
                 f"decoder_cache_size must be >= 0 (0 disables caching), "
                 f"got {decoder_cache_size}")
         self._decoder_cache_size = decoder_cache_size
         self._decoders: Dict = collections.OrderedDict()
+        # streaming counters for decode_stats()
+        self._batches = 0
+        self._compiles = 0
+        self._cold_ms: List[float] = []
+        self._warm_ms: List[float] = []
+        self._buckets: Dict[str, int] = {}
+        self._last: Optional[JpegPipelineStats] = None
 
     @staticmethod
     def _batch_key(blobs: Sequence[bytes]) -> bytes:
-        """Content digest of a batch. A compiled decoder bakes the batch's
-        device words into `dec.dev`, so the cache key must identify the
+        """Content digest of a batch. A decoder handle pins the batch's
+        device metadata and words, so the cache key must identify the
         *bytes*, not just the shape — keying on (count, total_bytes) made
         two different same-size batches silently reuse the first batch's
         bitstream and decode the wrong images."""
@@ -96,17 +132,21 @@ class JpegVisionPipeline:
                 use_kernels=self.use_kernels, backend=self.backend,
                 balance=self.balance,
                 lanes=(self.mesh.devices.size
-                       if self.mesh is not None else None))
-            self._decoders[key] = dec
-            while len(self._decoders) > self._decoder_cache_size:
-                self._decoders.popitem(last=False)
+                       if self.mesh is not None else None),
+                bucket=self.bucket)
+            if self._decoder_cache_size > 0:
+                self._decoders[key] = dec
+                while len(self._decoders) > self._decoder_cache_size:
+                    self._decoders.popitem(last=False)
         else:
             self._decoders.move_to_end(key)
         return dec
 
     def patches_for(self, blobs: Sequence[bytes]):
         """(B, n_patches, embed_dim) patch tokens + stats."""
+        t0 = time.perf_counter()
         dec = self._decoder(blobs)
+        compiles_before = dec.program.compiles
         if self.mesh is not None:
             out = dec.decode_on(self.mesh, emit="rgb")
         else:
@@ -119,13 +159,53 @@ class JpegVisionPipeline:
         x = x.reshape(b, hc, p, wc, p, 3).transpose(0, 1, 3, 2, 4, 5)
         x = x.reshape(b, hc * wc, p * p * 3)
         tokens = x @ self.w_embed
+        if self.sync_stats:
+            jax.block_until_ready(tokens)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        compiled = dec.program.compiles > compiles_before
         stats = JpegPipelineStats(
             compressed_mb=sum(len(bb) for bb in blobs) / 1e6,
             decoded_mb=b * h * w * 3 / 1e6,
             n_images=b,
             sync_rounds=out.sync_rounds,
+            decode_ms=dt_ms,
+            compiled=compiled,
+            bucket=dec.shape.label(),
         )
+        self._record(stats)
         return tokens, stats
+
+    def _record(self, stats: JpegPipelineStats) -> None:
+        self._batches += 1
+        self._compiles += int(stats.compiled)
+        log = self._cold_ms if stats.compiled else self._warm_ms
+        log.append(stats.decode_ms)
+        del log[:-100]  # bounded history for the medians
+        self._buckets[stats.bucket] = self._buckets.get(stats.bucket, 0) + 1
+        self._last = stats
+
+    def decode_stats(self) -> Dict:
+        """Streaming decode counters for dry-run reports.
+
+        ``compile_count`` counts batches that traced a decode program (the
+        compile-once target is: one per (bucket, sync, backend) over the
+        whole stream); ``warm_step_ms`` is the median decode+embed wall
+        time of non-compiling steps — the steady-state cost. Step times
+        include device execution only under ``sync_stats=True`` (the
+        default keeps dispatch asynchronous and measures host cost).
+        """
+        med = (lambda xs: float(np.median(xs)) if xs else 0.0)
+        last = self._last
+        return {
+            "batches": self._batches,
+            "compile_count": self._compiles,
+            "cold_step_ms": med(self._cold_ms),
+            "warm_step_ms": med(self._warm_ms),
+            "buckets": dict(self._buckets),
+            "active_bucket": last.bucket if last else "",
+            "sync_rounds": last.sync_rounds if last else 0,
+            "transfer_saving": last.transfer_saving if last else 0.0,
+        }
 
     def batches(self, dataset: Dataset, batch_size: int,
                 drop_remainder: bool = False):
@@ -136,6 +216,12 @@ class JpegVisionPipeline:
         ``len(blobs) % batch_size`` images (the old behavior) loses data in
         eval/export pipelines. Pass ``drop_remainder=True`` for fixed-shape
         training streams.
+
+        This is the steady-stream deployment the plan-bucket split targets:
+        every batch here is content-distinct, so only the shared per-bucket
+        program cache (never the content-keyed handle LRU) keeps the stream
+        from recompiling — after the first batch of a bucket, steps are
+        pure data movement (see docs/SERVING.md).
         """
         blobs = dataset.jpeg_bytes
         for i in range(0, len(blobs), batch_size):

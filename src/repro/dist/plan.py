@@ -306,4 +306,8 @@ def balance_lanes(plan, n_lanes: int, policy: str):
         chunk_order=order,
         seq_last_chunk=order[np.asarray(plan.seq_last_chunk)].astype(np.int32),
         balance=policy,
+        # record the block layout: capacity padding (core.bitstream.
+        # build_plan_data) pads each of these n_lanes blocks independently,
+        # so a bucketed plan keeps its per-device sequence assignment
+        n_lanes=n_lanes,
     )

@@ -22,6 +22,14 @@ invariant under the lane permutations a balanced plan
 padded to a lane multiple with inert lanes (start == limit), which the
 kernels treat exactly like the shard_map padding below — ``pad`` is then 0
 when the balance lane count matches the mesh.
+
+Capacity-bucketed plans (``core/bitstream.PlanShape`` / ``PlanData``, the
+compile-once streaming path) extend the same contract: every lane-axis
+operand arrives padded to the bucket's per-block capacity with inert lanes
+and every table operand padded with inert rows, so one shard_map program
+per (shape, mesh) serves a whole stream of batches. When the bucket's lane
+capacity already divides the mesh (the steady-state case), the wrappers
+skip the pad entirely.
 """
 from __future__ import annotations
 
@@ -73,7 +81,9 @@ def _run(fn, dev, entry, idx, kw, mesh, lane_axis, out_specs_fn):
         # padding lanes are inert: p=0, limit=0 -> never active in-kernel
         return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
 
-    padded = tuple(padl(a) for a in lane_args)
+    # bucketed PlanData lanes already arrive as a multiple of the mesh's
+    # lane count (capacities are per-block) — no pad ops in steady state
+    padded = tuple(padl(a) for a in lane_args) if pad else lane_args
     lane_specs = tuple(
         P(lane_axis, *([None] * (a.ndim - 1))) for a in padded
     )

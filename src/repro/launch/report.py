@@ -29,6 +29,61 @@ def fmt_s(s):
     return f"{s:.2f}s"
 
 
+def render_decode_stats(stats: dict) -> str:
+    """Render ``JpegVisionPipeline.decode_stats()`` (the streaming decode
+    counters) as the EXPERIMENTS.md §Decode-stream table.
+
+    Surfaced by the ``--jpeg-stream`` dry-runs in ``launch/serve.py`` /
+    ``launch/train.py``: compile count vs batches is the compile-once
+    check (one trace per capacity bucket x stage), warm-step ms the
+    steady-state input-pipeline cost.
+    """
+    out = []
+    out.append("### Decode stream (plan buckets)\n")
+    out.append("| batches | compiles | cold step | warm step | sync rounds "
+               "| transfer saving | active bucket |")
+    out.append("|---|---|---|---|---|---|---|")
+    out.append(
+        f"| {stats.get('batches', 0)} | {stats.get('compile_count', 0)} "
+        f"| {fmt_s(stats.get('cold_step_ms', 0.0) / 1e3)} "
+        f"| {fmt_s(stats.get('warm_step_ms', 0.0) / 1e3)} "
+        f"| {stats.get('sync_rounds', 0)} "
+        f"| {stats.get('transfer_saving', 0.0):.1f}x "
+        f"| `{stats.get('active_bucket', '')}` |")
+    buckets = stats.get("buckets") or {}
+    if buckets:
+        out.append("\nbuckets seen (batches per bucket): " + ", ".join(
+            f"`{k}`: {v}" for k, v in sorted(buckets.items())))
+    return "\n".join(out)
+
+
+def jpeg_stream_dryrun(n_batches: int, batch_size: int = 4,
+                       backend=None, sync: str = "jacobi",
+                       width: int = 32, height: int = 32,
+                       chunk_bits: int = 256, mesh=None) -> dict:
+    """Stream ``n_batches`` distinct synthetic JPEG batches through a
+    ``JpegVisionPipeline`` and return its ``decode_stats()``.
+
+    The ``--jpeg-stream N`` flag of ``launch/serve.py`` / ``launch/train.py``
+    runs this before the model driver so a dry run surfaces the decode-side
+    streaming counters (compile count vs batches, warm-step ms, active
+    bucket) next to the model numbers — pass the result to
+    :func:`render_decode_stats`.
+    """
+    from ..data.jpeg_pipeline import JpegVisionPipeline
+    from ..jpeg.encoder import DatasetSpec, build_dataset
+
+    ds = build_dataset(DatasetSpec("jpeg-stream-dryrun",
+                                   n_images=n_batches * batch_size,
+                                   width=width, height=height, quality=80))
+    pipe = JpegVisionPipeline(patch=8, embed_dim=64, chunk_bits=chunk_bits,
+                              backend=backend, sync=sync, mesh=mesh,
+                              decoder_cache_size=0, sync_stats=True)
+    for _ in pipe.batches(ds, batch_size=batch_size):
+        pass
+    return pipe.decode_stats()
+
+
 def render(path: str) -> str:
     rows = json.load(open(path))
     out = []

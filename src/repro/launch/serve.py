@@ -23,7 +23,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--jpeg-stream", type=int, default=0, metavar="N",
+                    help="dry-run the JPEG input pipeline over N distinct "
+                         "batches first and report the streaming decode "
+                         "stats (compile-once buckets, warm-step ms)")
     args = ap.parse_args()
+
+    if args.jpeg_stream:
+        from .report import jpeg_stream_dryrun, render_decode_stats
+        stats = jpeg_stream_dryrun(args.jpeg_stream, batch_size=args.batch)
+        print(render_decode_stats(stats), flush=True)
 
     cfg = get_smoke_config(args.arch)
     max_len = args.prompt_len + args.gen + 8 + (

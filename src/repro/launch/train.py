@@ -74,7 +74,16 @@ def main():
     ap.add_argument("--save-every", type=int, default=100)
     ap.add_argument("--resume", default="none")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--jpeg-stream", type=int, default=0, metavar="N",
+                    help="dry-run the JPEG input pipeline over N distinct "
+                         "batches first and report the streaming decode "
+                         "stats (compile-once buckets, warm-step ms)")
     args = ap.parse_args()
+
+    if args.jpeg_stream:
+        from .report import jpeg_stream_dryrun, render_decode_stats
+        stats = jpeg_stream_dryrun(args.jpeg_stream, batch_size=args.batch)
+        print(render_decode_stats(stats), flush=True)
 
     if args.smoke or args.preset == "smoke":
         cfg = get_smoke_config(args.arch)

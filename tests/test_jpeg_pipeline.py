@@ -70,6 +70,34 @@ def test_decoder_cache_is_bounded_lru():
     assert len(nocache._decoders) == 0
 
 
+def test_cache_size_zero_streams_through_shared_programs():
+    """Regression (bucket-cache eviction semantics): decoder_cache_size=0
+    must return a fresh, fully usable decoder every call, pin nothing in
+    the pipeline afterwards, and still reuse the *shared* per-bucket
+    compiled program — eviction drops a batch's device arrays, never a
+    compilation."""
+    from repro.core import clear_decode_programs, decode_programs
+    clear_decode_programs()
+    ds = build_dataset(DatasetSpec("t7", n_images=2, width=32, height=32,
+                                   quality=70))
+    pipe = JpegVisionPipeline(patch=8, embed_dim=32, chunk_bits=128,
+                              decoder_cache_size=0)
+    tok1, st1 = pipe.patches_for(ds.jpeg_bytes)
+    assert len(pipe._decoders) == 0 and st1.compiled
+    # the decoder handle built mid-call was usable and is now unreferenced;
+    # decoding the SAME batch again rebuilds a handle but must not retrace
+    tok2, st2 = pipe.patches_for(ds.jpeg_bytes)
+    assert len(pipe._decoders) == 0 and not st2.compiled
+    np.testing.assert_array_equal(np.asarray(tok1, np.float32),
+                                  np.asarray(tok2, np.float32))
+    assert all(p.coeffs_traces == 1 and p.pixels_traces == 1
+               for p in decode_programs())
+    # _decoder itself still hands back a working decoder at size 0
+    dec = pipe._decoder(ds.jpeg_bytes)
+    assert dec.decode(emit="coeffs").converged
+    assert len(pipe._decoders) == 0
+
+
 def test_pipeline_backend_knob():
     """backend="pallas" threads through to the decoder and yields the same
     tokens as the jnp reference."""
