@@ -17,12 +17,25 @@ decode cost. This suite measures the streaming behavior directly:
   shape compiles, so compiles-per-100 sits near 100 and the "warm" step is
   dominated by retracing.
 
+* ``stream/multihost/hN`` (``--hosts N`` CLI mode only) — the same stream
+  fed per host: N localhost ``jax.distributed`` processes each stream
+  their contiguous slice of the batches through their own pipeline, and
+  the parent reports every host's warm-step ms and compile count
+  separately (summing would hide a host stuck recompiling — see
+  ``JpegVisionPipeline.decode_stats``).
+
 Rows fold into the BENCH_JSON artifact in CI; the corpus is a fixed
 CI-sized synthetic stream (streaming behavior is a cache property, not a
 perf scale, so BENCH_SCALE does not apply; rows carry ``corpus=fixed``).
 The decode honors BENCH_BACKEND.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -85,8 +98,93 @@ def run_rows():
     return rows
 
 
+def _host_worker(pid: int, n_hosts: int, port: int) -> None:
+    """One process of the ``--hosts N`` mode: stream my slice, report."""
+    from repro.launch.multihost import init_distributed
+    init_distributed(coordinator=f"127.0.0.1:{port}",
+                     num_processes=n_hosts, process_id=pid)
+    batches = stream_blobs(N_BATCHES)
+    lo = pid * len(batches) // n_hosts
+    hi = (pid + 1) * len(batches) // n_hosts
+    st = _run_stream(batches[lo:hi], bucket=True)
+    print("RESULT " + json.dumps(st), flush=True)
+
+
+def run_multihost_rows(n_hosts: int):
+    """Spawn ``n_hosts`` localhost jax.distributed workers, one row each.
+
+    Per-host warm-step ms is the multi-host steady-state claim: every
+    process keeps its own compile-once bucket cache, so each row's
+    ``compiles`` should equal its bucket count, N times over.
+    """
+    import socket
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "benchmarks.stream", "--host-worker",
+         str(pid), str(n_hosts), str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+        for pid in range(n_hosts)]
+    # one shared wall clock + kill-all on any failure: a dead coordinator
+    # must not leave the other workers orphaned in their connect loops
+    import time
+    deadline = time.monotonic() + 900
+    outs = []
+    try:
+        for pid, p in enumerate(procs):
+            out, _ = p.communicate(timeout=max(1, deadline - time.monotonic()))
+            if p.returncode != 0:
+                raise RuntimeError(f"host {pid} failed:\n{out[-3000:]}")
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    rows = []
+    for pid, out in enumerate(outs):
+        line = [ln for ln in out.splitlines()
+                if ln.startswith("RESULT ")][-1]
+        st = json.loads(line[len("RESULT "):])
+        warm = st["warm_step_ms"] or st["cold_step_ms"]
+        rows.append({
+            "name": f"stream/multihost/h{pid}",
+            "us_per_call": warm * 1e3,
+            "derived": (
+                f"host={st['process_id']}/{st['process_count']}"
+                f";compiles={st['compile_count']}"
+                f";batches={st['batches']};buckets={len(st['buckets'])}"
+                f";cold_ms={st['cold_step_ms']:.1f};corpus=fixed"
+            ),
+        })
+    return rows
+
+
 def main():
-    emit(run_rows())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hosts", type=int, default=0, metavar="N",
+                    help="also run the stream split over N localhost "
+                         "jax.distributed processes and report per-host "
+                         "warm-step ms")
+    ap.add_argument("--hosts-only", action="store_true",
+                    help="skip the single-process rows (CI runs them in "
+                         "the main bench job already)")
+    ap.add_argument("--host-worker", nargs=3, metavar=("PID", "N", "PORT"),
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.host_worker:
+        pid, n, port = (int(x) for x in args.host_worker)
+        _host_worker(pid, n, port)
+        return
+    if args.hosts_only and not args.hosts:
+        ap.error("--hosts-only requires --hosts N")
+    rows = [] if args.hosts_only else run_rows()
+    if args.hosts:
+        rows += run_multihost_rows(args.hosts)
+    emit(rows)
 
 
 if __name__ == "__main__":

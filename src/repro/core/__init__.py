@@ -5,6 +5,7 @@ from .api import (DecodeOutput, DecodeProgram, ParallelDecoder,  # noqa: F401
                   decode_program_stats, decode_programs)
 from .bitstream import (BatchPlan, PlanData, PlanShape,  # noqa: F401
                         bucket_capacity, build_batch_plan, build_plan_data,
+                        consensus_plan, empty_batch_plan, merge_plan_shapes,
                         plan_shape, split_plan)
 from .state import DecodeState  # noqa: F401
 from .sync import faithful_sync, jacobi_sync  # noqa: F401

@@ -401,14 +401,20 @@ class ParallelDecoder:
     def __init__(self, plan: BatchPlan, sync: str = "jacobi",
                  idct_impl=None, backend: str = "jnp",
                  interpret: Optional[bool] = None,
-                 bucket: bool = True, ladder_step: float = LADDER_STEP):
+                 bucket: bool = True, ladder_step: float = LADDER_STEP,
+                 shape: Optional[PlanShape] = None):
         assert sync in ("jacobi", "faithful", "sequential", "specmap")
         check_backend(backend)
         self.plan = plan
         self.sync = sync
         self.backend = backend
         self.interpret = interpret
-        self.shape = plan_shape(plan, bucket=bucket, step=ladder_step)
+        # an explicit shape pins the compile bucket from outside — the
+        # multi-host consensus path (repro.launch.multihost) hands every
+        # process the merged shape so all hosts trace the same program;
+        # build_plan_data validates the plan actually fits it
+        self.shape = (shape if shape is not None
+                      else plan_shape(plan, bucket=bucket, step=ladder_step))
         self.data = build_plan_data(plan, self.shape)
         self.program = decode_program(self.shape, sync=sync, backend=backend,
                                       interpret=interpret,

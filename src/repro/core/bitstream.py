@@ -463,6 +463,198 @@ def split_plan(plan: BatchPlan, bucket: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Multi-host bucket consensus: merge per-host PlanShapes
+# ---------------------------------------------------------------------------
+#
+# In a multi-host launch (repro.launch.multihost) every host parses and
+# plans only the JPEG bytes it holds, so per-host PlanShapes differ in
+# their capacities and Huffman-derived constants. The hosts exchange ONLY
+# these tiny shapes and take the elementwise max (`merge_plan_shapes`), so
+# all processes land in the same bucket and trace the identical compiled
+# program — the compressed bytes never cross hosts. A host then aligns its
+# local plan's trace constants to the consensus (`consensus_plan`) before
+# padding its PlanData against the merged shape.
+#
+# Why the relaxed constants stay bit-exact:
+#   s_max          is only a loop *bound*; a lane stops decoding at its bit
+#                  limit (decode_symbol: active = p < limit), so extra
+#                  iterations are no-ops and any s_max >= the local need is
+#                  bit-identical. max() over hosts is always >= local.
+#   min_code_bits  is the advance applied in the speculative garbage phase
+#                  (invalid LUT window). Converged schedules emit from
+#                  truth-propagated entries that decode only valid
+#                  codewords, so the final coefficients are independent of
+#                  it; it only has to be small enough that s_max covers the
+#                  worst garbage walk — and the consensus pair
+#                  (min over hosts, max over hosts' s_max) is exactly the
+#                  self-consistent worst case, because s_max is the
+#                  monotone function chunk_bits // min_code + 2 of the
+#                  shared chunk_bits.
+
+def merge_plan_shapes(shapes: Sequence[PlanShape]) -> PlanShape:
+    """Elementwise-max consensus of per-host PlanShapes.
+
+    Capacities (and ``s_max``/``n_images``) take the max, ``min_code_bits``
+    the min; framing constants (``chunk_bits``, ``seq_chunks``) and the
+    lane layout (``n_lanes``, ``permuted``) must agree across hosts —
+    a mismatch raises instead of producing a shape some host cannot trace.
+    The pixel stage survives only when every host reports the same uniform
+    geometry *and* image count; otherwise the merged shape is coeffs-only
+    (``uniform=False``). Merging is commutative, associative, and
+    idempotent, and merged capacities stay on the ladder (a max of rungs
+    is a rung), so any exchange order converges to one bucket.
+    """
+    shapes = list(shapes)
+    if not shapes:
+        raise ValueError("merge_plan_shapes needs at least one shape")
+    for k in ("chunk_bits", "seq_chunks", "n_lanes", "permuted"):
+        vals = sorted({getattr(s, k) for s in shapes})
+        if len(vals) > 1:
+            raise ValueError(
+                f"plan shapes disagree on {k}: {vals} — every host must "
+                f"frame its batch with identical {k} (exchange/settle it "
+                f"before planning, see repro.launch.multihost)")
+    first = shapes[0]
+    uniform = (all(s.uniform for s in shapes)
+               and len({s.geometry for s in shapes}) == 1
+               and len({s.n_images for s in shapes}) == 1)
+
+    def cap(k: str) -> int:
+        return max(getattr(s, k) for s in shapes)
+
+    return PlanShape(
+        chunk_bits=first.chunk_bits,
+        seq_chunks=first.seq_chunks,
+        s_max=cap("s_max"),
+        min_code_bits=min(s.min_code_bits for s in shapes),
+        n_lanes=first.n_lanes,
+        permuted=first.permuted,
+        n_words=cap("n_words"),
+        n_luts=cap("n_luts"),
+        n_tablesets=cap("n_tablesets"),
+        n_matrices=cap("n_matrices"),
+        n_segments=cap("n_segments"),
+        n_chunks=cap("n_chunks"),
+        n_sequences=cap("n_sequences"),
+        n_units=cap("n_units"),
+        n_images=cap("n_images"),
+        uniform=uniform,
+        geometry=first.geometry if uniform else None,
+    )
+
+
+def consensus_plan(plan: BatchPlan, shape: PlanShape) -> BatchPlan:
+    """Align a host-local plan's trace constants to a consensus shape.
+
+    Returns a plan whose statics match ``shape`` exactly (so
+    :func:`build_plan_data` accepts it) while its arrays are untouched:
+    ``s_max``/``min_code_bits``/``n_images`` take the consensus values
+    (bit-exact by the argument above), and the pixel-stage flags collapse
+    to coeffs-only when the consensus is not uniform. Raises when ``shape``
+    is not actually a consensus covering this plan (a merge that did not
+    include this host's shape).
+    """
+    if plan.chunk_bits != shape.chunk_bits:
+        raise ValueError(
+            f"consensus chunk_bits {shape.chunk_bits} != plan's "
+            f"{plan.chunk_bits}: hosts must frame with one chunk size")
+    if plan.seq_chunks != shape.seq_chunks:
+        raise ValueError(
+            f"consensus seq_chunks {shape.seq_chunks} != plan's "
+            f"{plan.seq_chunks}")
+    if plan.n_lanes != shape.n_lanes or (plan.balance != "none") != shape.permuted:
+        raise ValueError(
+            f"consensus lane layout (n_lanes={shape.n_lanes}, "
+            f"permuted={shape.permuted}) != plan's (n_lanes={plan.n_lanes}, "
+            f"permuted={plan.balance != 'none'})")
+    if shape.s_max < plan.s_max or shape.min_code_bits > plan.min_code_bits:
+        raise ValueError(
+            f"shape (s_max={shape.s_max}, min_code_bits="
+            f"{shape.min_code_bits}) does not cover the plan (s_max="
+            f"{plan.s_max}, min_code_bits={plan.min_code_bits}): it is not "
+            f"a consensus that included this host's shape")
+    if shape.n_images < plan.n_images:
+        raise ValueError(
+            f"consensus n_images {shape.n_images} < plan's {plan.n_images}")
+    kw = dict(s_max=shape.s_max, min_code_bits=shape.min_code_bits,
+              n_images=shape.n_images)
+    if not shape.uniform:
+        kw.update(uniform=False, geometry=None)
+    elif not (plan.uniform and plan.geometry == shape.geometry
+              and plan.n_images == shape.n_images):
+        raise ValueError(
+            "consensus shape is uniform but this plan's geometry/image "
+            "count differs — merge_plan_shapes should have collapsed the "
+            "merge to coeffs-only")
+    return dataclasses.replace(plan, **kw)
+
+
+def empty_batch_plan(chunk_bits: int = 1024,
+                     seq_chunks: int = 32) -> BatchPlan:
+    """A decodable plan for a host holding zero JPEGs.
+
+    A multi-host launch can leave some processes without local images
+    (corpus smaller than the host count, skewed feeds); they still must
+    participate in the bucket consensus and run the same compiled program.
+    The empty plan is inert-lane-only: one zero-bit segment, one inert
+    chunk (start == limit, ``chunk_seq == -1``, self-chained — the
+    balance_lanes padding contract), zero units. Every sync schedule
+    converges on it immediately and the write pass writes nothing
+    (``units_end == 0`` clamps every store).
+
+    ``min_code_bits`` is the loosest legal value (16) and ``s_max`` the
+    matching bound — the consensus merge tightens both to the real hosts'
+    values; decoding the empty plan is constant-independent either way.
+    """
+    assert chunk_bits % 32 == 0, "chunk size must be a multiple of 32 bits"
+    min_code = 16
+    return BatchPlan(
+        chunk_bits=chunk_bits,
+        seq_chunks=seq_chunks,
+        s_max=chunk_bits // min_code + 2,
+        min_code_bits=min_code,
+        n_images=0,
+        n_segments=1,
+        n_chunks=1,
+        total_units=0,
+        uniform=False,
+        geometry=None,
+        words=np.zeros(1, np.uint32),
+        luts=np.zeros((1, 1 << 16), np.int32),
+        unit_lut_row=np.zeros((1, MAX_UPM, 2), np.int32),
+        unit_comp_map=np.zeros((1, MAX_UPM), np.int32),
+        ts_upm=np.ones(1, np.int32),
+        seg_word_base=np.zeros(1, np.int32),
+        seg_nbits=np.zeros(1, np.int32),
+        seg_tableset=np.zeros(1, np.int32),
+        seg_coeff_base=np.zeros(1, np.int64),
+        seg_image=np.zeros(1, np.int32),
+        chunk_seg=np.zeros(1, np.int32),
+        chunk_start=np.zeros(1, np.int32),
+        chunk_limit=np.zeros(1, np.int32),
+        chunk_first=np.ones(1, bool),
+        chunk_seq=np.full(1, -1, np.int32),
+        chunk_seq_first=np.ones(1, bool),
+        chunk_prev=np.zeros(1, np.int32),
+        chunk_next=np.zeros(1, np.int32),
+        lane_perm=np.zeros(1, np.int32),
+        chunk_order=np.zeros(1, np.int32),
+        n_real_chunks=0,
+        balance="none",
+        n_sequences=1,
+        seq_last_chunk=np.zeros(1, np.int32),
+        unit_comp=np.zeros(0, np.int32),
+        unit_seg_first=np.zeros(0, bool),
+        unit_mrow=np.zeros(0, np.int32),
+        unit_image=np.zeros(0, np.int32),
+        m_matrices=np.zeros((1, 64, 64), np.float32),
+        comp_unit_idx=None,
+        comp_block_idx=None,
+        comp_grid=None,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Plan builder
 # ---------------------------------------------------------------------------
 

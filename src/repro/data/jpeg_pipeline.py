@@ -193,9 +193,18 @@ class JpegVisionPipeline:
         time of non-compiling steps — the steady-state cost. Step times
         include device execution only under ``sync_stats=True`` (the
         default keeps dispatch asynchronous and measures host cost).
+
+        Counters are *per process*: in a multi-host launch every host
+        compiles (and feeds) independently, so the dict carries
+        ``process_id`` / ``process_count`` and must never be summed
+        across hosts — N hosts in one bucket report one compile *each*
+        (aggregate with :func:`repro.launch.multihost.gather_decode_stats`,
+        which keeps the per-host dicts separate).
         """
         med = (lambda xs: float(np.median(xs)) if xs else 0.0)
         last = self._last
+        from ..launch.multihost import process_info  # lazy: launch uses us
+        info = process_info()
         return {
             "batches": self._batches,
             "compile_count": self._compiles,
@@ -205,6 +214,8 @@ class JpegVisionPipeline:
             "active_bucket": last.bucket if last else "",
             "sync_rounds": last.sync_rounds if last else 0,
             "transfer_saving": last.transfer_saving if last else 0.0,
+            "process_id": info.process_id,
+            "process_count": info.num_processes,
         }
 
     def batches(self, dataset: Dataset, batch_size: int,

@@ -246,6 +246,35 @@ def plan_lane_loads(plan, n_lanes: int) -> np.ndarray:
     return real.reshape(n_lanes, -1).sum(axis=1).astype(np.int64)
 
 
+def local_batch_plan(local_blobs, *, chunk_bits: int = 1024,
+                     seq_chunks: int = 32, balance: str = "none",
+                     lanes: Optional[int] = None):
+    """Host-local planning for a multi-host launch: plan ONLY the bytes
+    this process holds.
+
+    The plan is built where the bytes live (the multi-host extension of
+    the paper's host-side responsibilities — cf. Sodsong et al.'s dynamic
+    partitioning): parse/unstuff/frame the local blobs, optionally
+    balance the lanes over this host's devices, and hand back a plan
+    whose bucketed ``PlanShape`` is what crosses hosts (see
+    ``repro.launch.multihost.plan_consensus``). A host with zero local
+    blobs gets the inert-lane-only ``empty_batch_plan`` so it still
+    participates in the consensus and runs the shared compiled program.
+    """
+    check_balance(balance)
+    from ..core.bitstream import build_batch_plan, empty_batch_plan
+    if not local_blobs:
+        plan = empty_batch_plan(chunk_bits=chunk_bits, seq_chunks=seq_chunks)
+    else:
+        plan = build_batch_plan(list(local_blobs), chunk_bits=chunk_bits,
+                                seq_chunks=seq_chunks)
+    if balance != "none":
+        n_lanes = (int(lanes) if lanes is not None
+                   else len(jax.local_devices()))
+        plan = balance_lanes(plan, n_lanes, balance)
+    return plan
+
+
 def balance_lanes(plan, n_lanes: int, policy: str):
     """Rewrite a BatchPlan with its chunk lanes balanced over ``n_lanes``.
 

@@ -33,6 +33,41 @@ def make_host_mesh(n: Optional[int] = None, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+# -- host-aware meshes (multi-host launch, repro.launch.multihost) ----------
+
+def make_local_data_mesh():
+    """1-D "data" mesh over THIS process's devices only.
+
+    The multi-host decoder's per-host stage runs here: chunk lanes shard
+    over the local chips while the compressed bytes stay host-resident.
+    Built from ``jax.local_devices()`` directly (``jax.make_mesh`` would
+    claim the whole cluster).
+    """
+    import numpy as np
+    return jax.sharding.Mesh(np.array(jax.local_devices()), ("data",))
+
+
+def make_global_data_mesh():
+    """1-D "data" mesh over every device of every process."""
+    return jax.make_mesh((jax.device_count(),), ("data",))
+
+
+def make_hosts_mesh():
+    """("hosts", "local") mesh: axis 0 enumerates processes.
+
+    Device rows are grouped by ``process_index`` so a ``P("hosts")``
+    sharding gives each host one contiguous block, replicated over its
+    local devices — the layout :func:`repro.launch.multihost.
+    assemble_global_coeffs` uses to stitch per-host decodes into one
+    global batch without any collective.
+    """
+    import numpy as np
+    devs = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    per_host = len(devs) // max(1, jax.process_count())
+    arr = np.array(devs).reshape(jax.process_count(), per_host)
+    return jax.sharding.Mesh(arr, ("hosts", "local"))
+
+
 # Hardware constants for the roofline analysis (TPU v5e).
 TPU_V5E = {
     "peak_flops_bf16": 197e12,   # FLOP/s per chip

@@ -40,27 +40,51 @@ def render_decode_stats(stats: dict) -> str:
     """
     out = []
     out.append("### Decode stream (plan buckets)\n")
-    out.append("| batches | compiles | cold step | warm step | sync rounds "
-               "| transfer saving | active bucket |")
-    out.append("|---|---|---|---|---|---|---|")
-    out.append(
-        f"| {stats.get('batches', 0)} | {stats.get('compile_count', 0)} "
-        f"| {fmt_s(stats.get('cold_step_ms', 0.0) / 1e3)} "
-        f"| {fmt_s(stats.get('warm_step_ms', 0.0) / 1e3)} "
-        f"| {stats.get('sync_rounds', 0)} "
-        f"| {stats.get('transfer_saving', 0.0):.1f}x "
-        f"| `{stats.get('active_bucket', '')}` |")
-    buckets = stats.get("buckets") or {}
-    if buckets:
-        out.append("\nbuckets seen (batches per bucket): " + ", ".join(
-            f"`{k}`: {v}" for k, v in sorted(buckets.items())))
+    hosts = stats.get("hosts")
+    per_host = hosts if hosts else [stats]
+    cols = "| batches | compiles | cold step | warm step | sync rounds " \
+           "| transfer saving | active bucket |"
+    sep = "|---|---|---|---|---|---|---|"
+    if hosts:
+        cols = "| host " + cols
+        sep = "|---" + sep
+    out.append(cols)
+    out.append(sep)
+    for st in per_host:
+        row = (
+            f"| {st.get('batches', 0)} | {st.get('compile_count', 0)} "
+            f"| {fmt_s(st.get('cold_step_ms', 0.0) / 1e3)} "
+            f"| {fmt_s(st.get('warm_step_ms', 0.0) / 1e3)} "
+            f"| {st.get('sync_rounds', 0)} "
+            f"| {st.get('transfer_saving', 0.0):.1f}x "
+            f"| `{st.get('active_bucket', '')}` |")
+        if hosts:
+            row = (f"| {st.get('process_id', 0)}/"
+                   f"{st.get('process_count', 1)} " + row)
+        out.append(row)
+    if hosts:
+        # per-host bucket maps: a host stuck bouncing between buckets is
+        # exactly what this surface exists to expose, so never collapse
+        # the footer to the main host's counters
+        for st in per_host:
+            bk = st.get("buckets") or {}
+            if bk:
+                out.append(
+                    f"\nhost {st.get('process_id', 0)} buckets "
+                    "(batches per bucket): " + ", ".join(
+                        f"`{k}`: {v}" for k, v in sorted(bk.items())))
+    else:
+        buckets = stats.get("buckets") or {}
+        if buckets:
+            out.append("\nbuckets seen (batches per bucket): " + ", ".join(
+                f"`{k}`: {v}" for k, v in sorted(buckets.items())))
     return "\n".join(out)
 
 
 def jpeg_stream_dryrun(n_batches: int, batch_size: int = 4,
                        backend=None, sync: str = "jacobi",
                        width: int = 32, height: int = 32,
-                       chunk_bits: int = 256, mesh=None) -> dict:
+                       chunk_bits: int = 256, mesh=None, ctx=None) -> dict:
     """Stream ``n_batches`` distinct synthetic JPEG batches through a
     ``JpegVisionPipeline`` and return its ``decode_stats()``.
 
@@ -69,9 +93,17 @@ def jpeg_stream_dryrun(n_batches: int, batch_size: int = 4,
     streaming counters (compile count vs batches, warm-step ms, active
     bucket) next to the model numbers — pass the result to
     :func:`render_decode_stats`.
+
+    With a multi-process ``ctx`` (:func:`repro.launch.multihost.
+    init_distributed`), the corpus is sharded per host
+    (:class:`~repro.launch.multihost.HostFeed`): every process streams only
+    its own slice, and the returned dict additionally carries ``hosts`` —
+    the per-host stats gathered over the coordination service, one entry
+    per process (compile counters stay per-host; see ``decode_stats``).
     """
     from ..data.jpeg_pipeline import JpegVisionPipeline
     from ..jpeg.encoder import DatasetSpec, build_dataset
+    from .multihost import HostFeed, gather_decode_stats
 
     ds = build_dataset(DatasetSpec("jpeg-stream-dryrun",
                                    n_images=n_batches * batch_size,
@@ -79,6 +111,13 @@ def jpeg_stream_dryrun(n_batches: int, batch_size: int = 4,
     pipe = JpegVisionPipeline(patch=8, embed_dim=64, chunk_bits=chunk_bits,
                               backend=backend, sync=sync, mesh=mesh,
                               decoder_cache_size=0, sync_stats=True)
+    if ctx is not None and ctx.num_processes > 1:
+        feed = HostFeed.from_corpus(ds.jpeg_bytes, ctx)
+        for batch in feed.batches(batch_size):
+            pipe.patches_for(batch)
+        stats = pipe.decode_stats()
+        stats["hosts"] = gather_decode_stats(stats, ctx)
+        return stats
     for _ in pipe.batches(ds, batch_size=batch_size):
         pass
     return pipe.decode_stats()

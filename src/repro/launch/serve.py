@@ -27,12 +27,26 @@ def main():
                     help="dry-run the JPEG input pipeline over N distinct "
                          "batches first and report the streaming decode "
                          "stats (compile-once buckets, warm-step ms)")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator for a multi-host "
+                         "launch (or REPRO_COORDINATOR); the JPEG stream "
+                         "is then fed per host")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="total process count of the multi-host launch "
+                         "(or REPRO_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this host's process id (or REPRO_PROCESS_ID)")
     args = ap.parse_args()
+
+    from .multihost import init_distributed
+    ctx = init_distributed(args.coordinator, args.processes, args.process_id)
 
     if args.jpeg_stream:
         from .report import jpeg_stream_dryrun, render_decode_stats
-        stats = jpeg_stream_dryrun(args.jpeg_stream, batch_size=args.batch)
-        print(render_decode_stats(stats), flush=True)
+        stats = jpeg_stream_dryrun(args.jpeg_stream, batch_size=args.batch,
+                                   ctx=ctx)
+        if ctx.is_main:
+            print(render_decode_stats(stats), flush=True)
 
     cfg = get_smoke_config(args.arch)
     max_len = args.prompt_len + args.gen + 8 + (

@@ -1,0 +1,161 @@
+"""Shared multi-process test harness.
+
+Two patterns the suite needs live here, once:
+
+* :func:`run_sub` — run a python snippet in ONE subprocess with a forced
+  XLA host-device count (``--xla_force_host_platform_device_count`` must
+  precede jax init, so multi-device tests cannot run in-process). This is
+  the 8-device pattern previously defined in ``test_distribution.py`` and
+  imported by the other suites.
+* :func:`run_hosts` — run a snippet in N cooperating ``jax.distributed``
+  processes on localhost TCP (the multi-host harness). Every process gets
+  a ``ctx`` (the initialized :class:`repro.launch.multihost.DistContext`)
+  and an ``emit(obj)`` helper; results come back as structured JSON, one
+  object per process, ordered by process id. A hung process fails the
+  whole run fast via a hard wall-clock timeout that kills every worker —
+  a distributed deadlock must never stall the suite.
+
+Result channel: a process reports by printing one ``RESULT <json>`` line
+(the :func:`run_hosts` prelude provides ``emit``; :func:`run_json`
+snippets print it themselves). Everything else on stdout/stderr is free-
+form debug output and is surfaced on failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import time
+from typing import Dict, List, Optional, Tuple
+
+TESTS = os.path.dirname(__file__)
+SRC = os.path.join(TESTS, "..", "src")
+RESULT_TAG = "RESULT "
+
+
+def _env(devices: int) -> Dict[str, str]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    # snippets can import repro and the shared test helpers (conftest)
+    env["PYTHONPATH"] = SRC + os.pathsep + TESTS
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run a snippet in one subprocess with ``devices`` forced host devices.
+
+    Asserts a zero exit (stderr tail in the failure message) and returns
+    stdout.
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=_env(devices),
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def parse_result(stdout: str):
+    """The object from the last ``RESULT <json>`` line of a process."""
+    lines = [ln for ln in stdout.splitlines() if ln.startswith(RESULT_TAG)]
+    assert lines, f"no {RESULT_TAG!r} line in output:\n{stdout[-3000:]}"
+    return json.loads(lines[-1][len(RESULT_TAG):])
+
+
+def run_json(code: str, devices: int = 8, timeout: int = 560):
+    """:func:`run_sub`, returning the snippet's ``RESULT`` JSON object."""
+    return parse_result(run_sub(code, devices=devices, timeout=timeout))
+
+
+def free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+# Every run_hosts worker starts from this prelude: distributed init via the
+# subsystem under test (repro.launch.multihost), then the caller's snippet
+# with `ctx` and `emit` in scope.
+_HOST_PRELUDE = """\
+import json, os, sys
+
+def emit(obj):
+    print({tag!r} + json.dumps(obj), flush=True)
+
+from repro.launch.multihost import init_distributed
+ctx = init_distributed(coordinator={coord!r}, num_processes={n},
+                       process_id={pid}, timeout_s={init_timeout})
+"""
+
+
+def spawn_hosts(code: str, n_hosts: int, devices_per_host: int = 1,
+                init_timeout: int = 120,
+                coordinator: Optional[str] = None,
+                num_processes: Optional[List[int]] = None,
+                ) -> List[subprocess.Popen]:
+    """Spawn the worker processes of a :func:`run_hosts` run.
+
+    ``num_processes`` overrides the process count each worker *claims*
+    (one entry per worker) — the mismatched-count negative tests use it;
+    by default every worker claims ``n_hosts``.
+    """
+    coord = coordinator or f"127.0.0.1:{free_port()}"
+    code = textwrap.dedent(code)
+    procs = []
+    for pid in range(n_hosts):
+        claims = num_processes[pid] if num_processes is not None else n_hosts
+        src = _HOST_PRELUDE.format(tag=RESULT_TAG, coord=coord, n=claims,
+                                   pid=pid, init_timeout=init_timeout) + code
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", src], stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True, env=_env(devices_per_host)))
+    return procs
+
+
+def collect_hosts(procs: List[subprocess.Popen],
+                  timeout: int = 420) -> List[Tuple[int, str]]:
+    """(returncode, combined output) per process; kills ALL workers on a
+    wall-clock timeout so a distributed hang fails fast, never stalls."""
+    outs: List[Optional[str]] = [None] * len(procs)
+    deadline = time.monotonic() + timeout
+    try:
+        for i, p in enumerate(procs):
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise subprocess.TimeoutExpired(p.args, timeout)
+            out, _ = p.communicate(timeout=left)
+            outs[i] = out
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        partial = "\n".join(
+            f"=== process {i} (rc={p.poll()}) ===\n{o or '<no output>'}"
+            for i, (p, o) in enumerate(zip(procs, outs)))
+        raise AssertionError(
+            f"multi-host run timed out after {timeout}s (distributed "
+            f"hang?); partial output:\n{partial[-6000:]}")
+    return [(p.returncode, o or "") for p, o in zip(procs, outs)]
+
+
+def run_hosts(code: str, n_hosts: int, devices_per_host: int = 1,
+              timeout: int = 420, init_timeout: int = 120) -> List[dict]:
+    """Run a snippet in ``n_hosts`` localhost ``jax.distributed`` processes.
+
+    The snippet sees ``ctx`` (an initialized DistContext) and ``emit(obj)``
+    and must emit exactly one RESULT object per process. Returns the
+    emitted objects ordered by process id; any nonzero exit or hang fails
+    with the offending process's output.
+    """
+    procs = spawn_hosts(code, n_hosts, devices_per_host=devices_per_host,
+                        init_timeout=init_timeout)
+    results = collect_hosts(procs, timeout=timeout)
+    for pid, (rc, out) in enumerate(results):
+        assert rc == 0, (f"process {pid}/{n_hosts} failed "
+                         f"(rc={rc}):\n{out[-4000:]}")
+    return [parse_result(out) for _, out in results]

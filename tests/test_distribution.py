@@ -2,15 +2,10 @@
 with forced device count), elastic re-mesh restore, pipeline schedule.
 
 NOTE: XLA_FLAGS device-count forcing must happen before jax init, so
-multi-device tests run in subprocesses; in-process tests use logical rules
-on the single host device (specs resolve, constraints no-op).
+multi-device tests run in subprocesses (the shared tests/_multiproc.py
+harness); in-process tests use logical rules on the single host device
+(specs resolve, constraints no-op).
 """
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,17 +14,7 @@ import pytest
 from repro.dist.collectives import collective_bytes, summarize
 from repro.dist.sharding import DEFAULT_RULES, logical_rules, resolve
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def run_sub(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+from _multiproc import run_sub
 
 
 class TestLogicalRules:

@@ -1,0 +1,570 @@
+"""Multi-host launch: bucket consensus, per-host feeding, jax.distributed.
+
+The cross-process invariant this suite pins down (ISSUE 5): every host
+plans only its local JPEG bytes, hosts exchange ONLY their tiny PlanShape,
+and the elementwise-max merge lands every process in the SAME compile
+bucket — so the PR-4 compile-once cache holds across a cluster (one trace
+per bucket per host) and the concatenated per-host decodes are
+bit-identical to a single-process decode of the whole corpus.
+
+Fast tests run in-process (merge algebra, consensus padding, HostFeed,
+init_distributed validation, the hypothesis consensus property). The
+`slow`-marked tests spawn real N=2 / N=4 ``jax.distributed`` process
+groups on localhost TCP via tests/_multiproc.run_hosts (hard timeout:
+a distributed hang fails fast, never stalls the suite).
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+try:  # real hypothesis when installed; offline deterministic shim otherwise
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro.core import (ParallelDecoder, build_batch_plan, build_plan_data,
+                        bucket_capacity, consensus_plan, empty_batch_plan,
+                        merge_plan_shapes, plan_shape)
+from repro.jpeg import codec_ref as cr
+from repro.launch.multihost import (DistContext, HostFeed, init_distributed,
+                                    shape_from_wire, shape_to_wire)
+
+from conftest import synth_image
+from _multiproc import collect_hosts, run_hosts, run_sub, spawn_hosts
+
+CAPACITY_FIELDS = ("n_words", "n_luts", "n_tablesets", "n_matrices",
+                   "n_segments", "n_chunks", "n_sequences", "n_units")
+
+
+def oracle_coeffs(blobs):
+    return np.concatenate([
+        cr.undiff_dc(p := cr.parse_jpeg(b), cr.decode_coefficients(p))
+        for b in blobs])
+
+
+def small_corpus(n=4, size=(32, 32), quality=80):
+    return [cr.encode_baseline(synth_image(*size, seed=s),
+                               quality=quality).jpeg_bytes
+            for s in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Merge algebra
+# ---------------------------------------------------------------------------
+
+class TestMergePlanShapes:
+    def _shapes(self):
+        blobs = small_corpus(4)
+        plans = [build_batch_plan(blobs[:1], chunk_bits=256),
+                 build_batch_plan(blobs[1:], chunk_bits=256)]
+        return [plan_shape(p) for p in plans]
+
+    def test_elementwise_max_and_rung_fixpoint(self):
+        a, b = self._shapes()
+        m = merge_plan_shapes([a, b])
+        for f in CAPACITY_FIELDS:
+            assert getattr(m, f) == max(getattr(a, f), getattr(b, f))
+            # merged capacities stay on the ladder
+            assert bucket_capacity(getattr(m, f)) == getattr(m, f)
+        assert m.s_max == max(a.s_max, b.s_max)
+        assert m.min_code_bits == min(a.min_code_bits, b.min_code_bits)
+
+    def test_commutative_associative_idempotent(self):
+        a, b = self._shapes()
+        e = plan_shape(empty_batch_plan(chunk_bits=256))
+        m = merge_plan_shapes([a, b, e])
+        assert merge_plan_shapes([b, e, a]) == m
+        assert merge_plan_shapes([merge_plan_shapes([a, b]), e]) == m
+        assert merge_plan_shapes([m]) == m
+        assert merge_plan_shapes([m, a]) == m
+
+    def test_framing_mismatch_raises(self):
+        a, _ = self._shapes()
+        other = plan_shape(build_batch_plan(small_corpus(1), chunk_bits=512))
+        with pytest.raises(ValueError, match="chunk_bits"):
+            merge_plan_shapes([a, other])
+
+    def test_uniform_collapses_on_mixed_counts(self):
+        a, b = self._shapes()  # 1 image vs 3 images, same geometry
+        assert a.uniform and b.uniform
+        m = merge_plan_shapes([a, b])
+        assert not m.uniform and m.geometry is None
+        # equal counts + equal geometry keep the pixel stage
+        blobs = small_corpus(4)
+        halves = [plan_shape(build_batch_plan(h, chunk_bits=256))
+                  for h in (blobs[:2], blobs[2:])]
+        m2 = merge_plan_shapes(halves)
+        assert m2.uniform and m2.geometry == halves[0].geometry
+
+    def test_wire_roundtrip(self):
+        a, b = self._shapes()
+        for s in (a, b, merge_plan_shapes([a, b])):
+            assert shape_from_wire(shape_to_wire(s)) == s
+        with pytest.raises(ValueError, match="wire version"):
+            shape_from_wire('{"_v": 999}')
+
+
+# ---------------------------------------------------------------------------
+# Consensus-aligned plans decode bit-identically
+# ---------------------------------------------------------------------------
+
+class TestConsensusPlan:
+    def test_covering_shape_accepted_and_fits(self):
+        blobs = small_corpus(4)
+        plans = [build_batch_plan(h, chunk_bits=256)
+                 for h in (blobs[:1], blobs[1:])]
+        merged = merge_plan_shapes([plan_shape(p) for p in plans])
+        for p in plans:
+            aligned = consensus_plan(p, merged)
+            assert aligned.s_max == merged.s_max
+            assert aligned.min_code_bits == merged.min_code_bits
+            build_plan_data(aligned, merged)  # must not raise
+
+    def test_non_covering_shape_raises(self):
+        blobs = small_corpus(2)
+        p = build_batch_plan(blobs, chunk_bits=256)
+        sole = plan_shape(build_batch_plan(blobs[:1], chunk_bits=256))
+        # a merge that did not include this host's shape
+        with pytest.raises(ValueError):
+            consensus_plan(p, sole)
+        with pytest.raises(ValueError, match="chunk_bits"):
+            consensus_plan(build_batch_plan(blobs, chunk_bits=512),
+                           plan_shape(p))
+
+    @pytest.mark.parametrize("sync,backend", [("jacobi", "jnp"),
+                                              ("specmap", "jnp"),
+                                              ("jacobi", "pallas")])
+    def test_split_decode_bit_identical(self, sync, backend):
+        """Two in-process 'hosts' under the merged shape reproduce the
+        single-process decode of the concatenated corpus exactly (the
+        consensus-relaxed s_max/min_code_bits feed the kernels' loop
+        bounds too, so the Pallas path is covered)."""
+        blobs = small_corpus(4)
+        exp = oracle_coeffs(blobs)
+        halves = [blobs[:2], blobs[2:]]
+        plans = [build_batch_plan(h, chunk_bits=256) for h in halves]
+        merged = merge_plan_shapes([plan_shape(p) for p in plans])
+        got = np.concatenate([
+            np.asarray(ParallelDecoder(consensus_plan(p, merged), sync=sync,
+                                       backend=backend,
+                                       shape=merged).coefficients().coeffs)
+            for p in plans])
+        assert np.array_equal(got, exp)
+
+
+# ---------------------------------------------------------------------------
+# Zero-JPEG hosts
+# ---------------------------------------------------------------------------
+
+class TestEmptyHostPlan:
+    @pytest.mark.parametrize("sync",
+                             ["jacobi", "faithful", "specmap", "sequential"])
+    def test_empty_plan_decodes_to_nothing(self, sync):
+        dec = ParallelDecoder(empty_batch_plan(chunk_bits=256), sync=sync)
+        out = dec.coefficients()
+        assert out.coeffs.shape == (0, 64)
+        assert out.converged
+
+    def test_empty_host_in_consensus(self):
+        blobs = small_corpus(2)
+        real = build_batch_plan(blobs, chunk_bits=256)
+        empty = empty_batch_plan(chunk_bits=256)
+        merged = merge_plan_shapes([plan_shape(real), plan_shape(empty)])
+        # the empty host runs the same bucket on inert-only data
+        aligned = consensus_plan(empty, merged)
+        out = ParallelDecoder(aligned, shape=merged).coefficients()
+        assert out.coeffs.shape == (0, 64) and out.converged
+        # and the real host is unaffected
+        got = ParallelDecoder(consensus_plan(real, merged),
+                              shape=merged).coefficients()
+        assert np.array_equal(np.asarray(got.coeffs), oracle_coeffs(blobs))
+
+
+# ---------------------------------------------------------------------------
+# Per-host feeding
+# ---------------------------------------------------------------------------
+
+class TestHostFeed:
+    def test_bounds_contiguous_balanced_cover(self):
+        for n_items, n_proc in [(0, 3), (2, 4), (7, 3), (8, 2), (5, 1)]:
+            b = HostFeed.bounds(n_items, n_proc)
+            assert b[0] == 0 and b[-1] == n_items and len(b) == n_proc + 1
+            sizes = [hi - lo for lo, hi in zip(b, b[1:])]
+            assert all(s >= 0 for s in sizes)
+            assert max(sizes) - min(sizes) <= 1
+            # contiguity: concatenating slices reproduces the corpus order
+            assert sorted(b) == b
+
+    def test_from_corpus_slices(self):
+        corpus = [bytes([i]) for i in range(7)]
+        got = []
+        for pid in range(3):
+            ctx = DistContext(pid, 3, None, False)
+            got.extend(HostFeed.from_corpus(corpus, ctx).local_blobs)
+        assert got == corpus
+
+    def test_short_corpus_leaves_tail_hosts_empty(self):
+        corpus = [b"a", b"b"]
+        sizes = [len(HostFeed.from_corpus(corpus, DistContext(p, 4, None,
+                                                              False)))
+                 for p in range(4)]
+        assert sizes == [1, 1, 0, 0]
+
+    def test_batches(self):
+        feed = HostFeed([bytes([i]) for i in range(5)],
+                        DistContext(0, 1, None, False))
+        groups = feed.batches(2)
+        assert [len(g) for g in groups] == [2, 2, 1]
+        with pytest.raises(ValueError):
+            feed.batches(0)
+
+
+# ---------------------------------------------------------------------------
+# init_distributed: validation must raise, never hang
+# ---------------------------------------------------------------------------
+
+class TestInitDistributedValidation:
+    def test_nothing_configured_is_single_process(self, monkeypatch):
+        for var in ("REPRO_COORDINATOR", "REPRO_NUM_PROCESSES",
+                    "REPRO_PROCESS_ID", "JAX_COORDINATOR_ADDRESS",
+                    "JAX_NUM_PROCESSES", "JAX_PROCESS_ID"):
+            monkeypatch.delenv(var, raising=False)
+        ctx = init_distributed()
+        assert ctx.num_processes == 1 and not ctx.initialized
+
+    def test_one_process_is_noop(self):
+        ctx = init_distributed(num_processes=1)
+        assert ctx.num_processes == 1 and not ctx.initialized
+
+    def test_missing_coordinator_raises(self):
+        with pytest.raises(ValueError, match="coordinator"):
+            init_distributed(num_processes=2, process_id=0)
+
+    def test_missing_process_id_raises(self):
+        with pytest.raises(ValueError, match="process_id"):
+            init_distributed(coordinator="127.0.0.1:9", num_processes=2)
+
+    def test_process_id_out_of_range_raises(self):
+        with pytest.raises(ValueError, match="out of range"):
+            init_distributed(coordinator="127.0.0.1:9", num_processes=2,
+                             process_id=2)
+
+    def test_nonpositive_count_raises(self):
+        with pytest.raises(ValueError, match="positive"):
+            init_distributed(coordinator="127.0.0.1:9", num_processes=0,
+                             process_id=0)
+
+    def test_count_without_rest_raises_from_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_NUM_PROCESSES", "2")
+        monkeypatch.delenv("REPRO_COORDINATOR", raising=False)
+        monkeypatch.delenv("REPRO_PROCESS_ID", raising=False)
+        monkeypatch.delenv("JAX_COORDINATOR_ADDRESS", raising=False)
+        with pytest.raises(ValueError, match="coordinator"):
+            init_distributed()
+
+    def test_garbage_env_count_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_NUM_PROCESSES", "two")
+        with pytest.raises(ValueError, match="integer"):
+            init_distributed()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: the bucket-consensus invariant
+# ---------------------------------------------------------------------------
+
+_POOL = None
+
+
+def _pool():
+    """A small pre-encoded image pool (varied size/quality => varied
+    geometry, words, Huffman tables), shared across examples."""
+    global _POOL
+    if _POOL is None:
+        specs = [((16, 16), 70), ((16, 16), 90), ((32, 32), 80),
+                 ((32, 32), 95), ((24, 40), 75), ((8, 8), 85)]
+        _POOL = [cr.encode_baseline(synth_image(*wh, seed=i), quality=q
+                                    ).jpeg_bytes
+                 for i, (wh, q) in enumerate(specs)]
+    return _POOL
+
+
+class TestConsensusProperty:
+    @settings(max_examples=20, deadline=None)
+    @given(n_images=st.integers(1, 6), n_hosts=st.integers(1, 4),
+           seed=st.integers(0, 10_000))
+    def test_hostwise_merge_covers_and_stays_on_ladder(self, n_images,
+                                                       n_hosts, seed):
+        """For ANY split of ANY corpus: the elementwise-max merge of the
+        host-local PlanShapes (i) keeps every capacity on the bucket
+        ladder, (ii) equals the max of the per-host shapes fieldwise,
+        (iii) never exceeds the bucketed single-process shape of the whole
+        corpus, (iv) reproduces the single-process Huffman constants
+        exactly, and (v) is a shape every host's aligned plan fits."""
+        rng = np.random.default_rng(seed)
+        pool = _pool()
+        corpus = [pool[int(rng.integers(len(pool)))] for _ in range(n_images)]
+        # random contiguous split (empty hosts allowed)
+        cuts = sorted(int(rng.integers(0, n_images + 1))
+                      for _ in range(n_hosts - 1))
+        bounds = [0] + cuts + [n_images]
+        parts = [corpus[lo:hi] for lo, hi in zip(bounds, bounds[1:])]
+
+        plans = [build_batch_plan(p, chunk_bits=256) if p
+                 else empty_batch_plan(chunk_bits=256) for p in parts]
+        shapes = [plan_shape(p) for p in plans]
+        merged = merge_plan_shapes(shapes)
+        single = plan_shape(build_batch_plan(corpus, chunk_bits=256))
+
+        for f in CAPACITY_FIELDS:
+            m = getattr(merged, f)
+            assert m == max(getattr(s, f) for s in shapes)
+            assert bucket_capacity(m) == m, f
+            assert m <= getattr(single, f), f
+        # Huffman-derived constants settle to the single-process values
+        # when no host is empty (an empty host only loosens min_code
+        # upward, which min() discards; its s_max floor can only matter
+        # for degenerate all-empty corpora)
+        if all(parts):
+            assert merged.s_max == single.s_max
+            assert merged.min_code_bits == single.min_code_bits
+        # every host fits the consensus
+        for p in plans:
+            build_plan_data(consensus_plan(p, merged), merged)
+
+    @settings(max_examples=6, deadline=None)
+    @given(n_hosts=st.integers(2, 4), seed=st.integers(0, 10_000))
+    def test_split_decode_matches_single_process(self, n_hosts, seed):
+        """Random split decode under the consensus == single-process
+        decode, concatenated in host order (the bit-identity contract)."""
+        rng = np.random.default_rng(seed)
+        pool = _pool()
+        corpus = [pool[int(rng.integers(len(pool)))] for _ in range(4)]
+        exp = oracle_coeffs(corpus)
+        bounds = HostFeed.bounds(len(corpus), n_hosts)
+        parts = [corpus[lo:hi] for lo, hi in zip(bounds, bounds[1:])]
+        plans = [build_batch_plan(p, chunk_bits=256) if p
+                 else empty_batch_plan(chunk_bits=256) for p in parts]
+        merged = merge_plan_shapes([plan_shape(p) for p in plans])
+        got = np.concatenate([
+            np.asarray(ParallelDecoder(consensus_plan(p, merged),
+                                       shape=merged).coefficients().coeffs)
+            for p in plans])
+        assert np.array_equal(got, exp)
+
+
+# ---------------------------------------------------------------------------
+# Real jax.distributed process groups (localhost TCP)
+# ---------------------------------------------------------------------------
+
+_DECODE_SNIPPET = """
+import numpy as np, hashlib
+from conftest import synth_image
+from repro.jpeg import codec_ref as cr
+from repro.core import decode_programs
+from repro.launch.multihost import HostFeed, decode_multihost
+
+corpus = [cr.encode_baseline(synth_image(32, 32, seed=s),
+                             quality=80).jpeg_bytes for s in range({n_img})]
+feed = HostFeed.from_corpus(corpus, ctx)
+out = decode_multihost(feed.local_blobs, ctx, chunk_bits=256, sync={sync!r})
+co = np.ascontiguousarray(np.asarray(out.local.coeffs))
+shard = np.asarray(out.global_coeffs.addressable_shards[0].data)
+pad = np.zeros((out.shape.n_units, 64), np.int32)
+pad[: co.shape[0]] = co
+emit({{
+    "pid": ctx.process_id,
+    "digest": hashlib.blake2b(co.tobytes()).hexdigest(),
+    "n_local": len(feed), "units": out.unit_counts,
+    "bucket": out.shape.label(), "compiles": out.compiles,
+    "traces": [p.coeffs_traces for p in decode_programs()],
+    "converged": bool(out.local.converged),
+    "global_rows": out.global_coeffs.shape[0],
+    "shard_matches_local": bool(np.array_equal(shard, pad)),
+}})
+"""
+
+
+def _expected_host_digests(corpus, n_hosts):
+    exp = oracle_coeffs(corpus)
+    units = [cr.parse_jpeg(b).n_units for b in corpus]
+    bounds = HostFeed.bounds(len(corpus), n_hosts)
+    out = []
+    for lo, hi in zip(bounds, bounds[1:]):
+        a, b = sum(units[:lo]), sum(units[:hi])
+        out.append(hashlib.blake2b(
+            np.ascontiguousarray(exp[a:b]).tobytes()).hexdigest())
+    return out
+
+
+@pytest.mark.slow
+class TestMultiProcessDecode:
+    def _check(self, n_hosts, n_img, sync="jacobi", devices_per_host=1):
+        corpus = [cr.encode_baseline(synth_image(32, 32, seed=s),
+                                     quality=80).jpeg_bytes
+                  for s in range(n_img)]
+        results = run_hosts(
+            _DECODE_SNIPPET.format(n_img=n_img, sync=sync), n_hosts,
+            devices_per_host=devices_per_host)
+        expected = _expected_host_digests(corpus, n_hosts)
+        units = [cr.parse_jpeg(b).n_units for b in corpus]
+        bounds = HostFeed.bounds(n_img, n_hosts)
+        exp_units = [sum(units[lo:hi])
+                     for lo, hi in zip(bounds, bounds[1:])]
+        buckets = {r["bucket"] for r in results}
+        assert len(buckets) == 1, f"hosts disagree on the bucket: {buckets}"
+        for pid, r in enumerate(results):
+            assert r["pid"] == pid
+            assert r["converged"]
+            # bit-identity against the single-process slice
+            assert r["digest"] == expected[pid], f"host {pid} differs"
+            assert r["units"] == exp_units
+            # compile-once across the cluster: one trace per bucket per host
+            assert r["compiles"] == 1
+            assert r["traces"] == [1]
+            # the globally-sharded batch carries this host's padded block
+            assert r["global_rows"] == n_hosts * (
+                int(r["bucket"].split(":u")[1].split(":")[0]))
+            assert r["shard_matches_local"]
+        return results
+
+    def test_n2_decode_bit_identical_to_single_process(self):
+        self._check(n_hosts=2, n_img=4)
+
+    def test_n4_decode_bit_identical_to_single_process(self):
+        self._check(n_hosts=4, n_img=6)
+
+    def test_n4_short_corpus_empty_hosts_participate(self):
+        """2 images over 4 hosts: the two empty hosts run the same bucket
+        on inert-only PlanData and report the same single trace."""
+        results = self._check(n_hosts=4, n_img=2)
+        assert [r["n_local"] for r in results] == [1, 1, 0, 0]
+
+    def test_n2_local_mesh_decode(self):
+        """Each host shards its lanes over 2 local devices (decode_on a
+        local mesh) — still bit-identical and single-bucket."""
+        self._check(n_hosts=2, n_img=4, devices_per_host=2)
+
+    def test_n2_sequential_settles_chunk_bits(self):
+        """sync="sequential" has a data-dependent chunk size; the
+        pre-consensus round must land every host on one framing."""
+        self._check(n_hosts=2, n_img=4, sync="sequential")
+
+    def test_n2_compile_once_across_batch_stream(self):
+        """3 content-distinct batches per host: traces per host == number
+        of distinct consensus buckets (never per batch), and the bucket
+        sequence is identical on every host. Reuses one explicit tag per
+        step — each use must get a fresh KV round (the coordination
+        service's keys are write-once), never a collision or a stale
+        peer shape."""
+        out = run_hosts("""
+import numpy as np
+from conftest import synth_image
+from repro.jpeg import codec_ref as cr
+from repro.core import decode_programs
+from repro.launch.multihost import HostFeed, decode_multihost
+
+labels = []
+for step in range(3):
+    corpus = [cr.encode_baseline(synth_image(32, 32, seed=100 * step + s),
+                                 quality=80).jpeg_bytes for s in range(4)]
+    feed = HostFeed.from_corpus(corpus, ctx)
+    out = decode_multihost(feed.local_blobs, ctx, chunk_bits=256,
+                           assemble=False, tag="step")
+    labels.append(out.shape.label())
+emit({"pid": ctx.process_id, "labels": labels,
+      "traces": sorted(p.coeffs_traces for p in decode_programs())})
+""", 2)
+        assert out[0]["labels"] == out[1]["labels"]
+        n_buckets = len(set(out[0]["labels"]))
+        for r in out:
+            # one compile per distinct bucket per host, each traced once
+            assert len(r["traces"]) == n_buckets
+            assert all(t == 1 for t in r["traces"])
+
+    def test_n2_decode_stats_per_host(self):
+        """decode_stats() is per-process: each host reports its own
+        compile count (one per bucket it saw) and its process identity;
+        gather_decode_stats keeps the dicts separate."""
+        out = run_hosts("""
+from repro.launch.report import jpeg_stream_dryrun
+
+stats = jpeg_stream_dryrun(4, batch_size=2, ctx=ctx)
+emit({"pid": ctx.process_id, "stats_pid": stats["process_id"],
+      "stats_n": stats["process_count"], "batches": stats["batches"],
+      "compiles": stats["compile_count"],
+      "n_buckets": len(stats["buckets"]),
+      "hosts": [(h["process_id"], h["compile_count"], h["batches"])
+                for h in stats["hosts"]]})
+""", 2)
+        for pid, r in enumerate(out):
+            assert r["stats_pid"] == pid and r["stats_n"] == 2
+            assert r["batches"] == 2
+            # per-host compile-once: one trace per bucket this host saw
+            assert r["compiles"] == r["n_buckets"]
+            # both hosts see the same un-summed per-host breakdown
+            assert r["hosts"] == out[0]["hosts"]
+            assert [h[0] for h in r["hosts"]] == [0, 1]
+
+
+@pytest.mark.slow
+class TestDistributedNegativePaths:
+    def test_unreachable_coordinator_raises_not_hangs(self):
+        """A wrong coordinator address must surface as a catchable Python
+        error within the timeout — the raw XLA client would instead
+        hard-kill the process with an abseil FATAL (no traceback, no
+        launcher-visible message)."""
+        out = run_sub("""
+            from repro.launch.multihost import init_distributed
+            try:
+                init_distributed(coordinator="127.0.0.1:1", num_processes=2,
+                                 process_id=1, timeout_s=5)
+            except RuntimeError as e:
+                msg = str(e)
+                assert "127.0.0.1:1" in msg and "unreachable" in msg, msg
+                print("FAILED_FAST")
+            else:
+                raise SystemExit("initialize unexpectedly succeeded")
+        """, devices=1, timeout=180)
+        assert "FAILED_FAST" in out
+
+    def test_bad_coordinator_format_raises(self):
+        with pytest.raises(ValueError, match="host:port"):
+            from repro.launch.multihost import _wait_for_coordinator
+            _wait_for_coordinator("no-port-here", 1, who="p")
+
+    def test_mismatched_process_counts_fail_fast(self):
+        """A host launched with the wrong --processes waits for a peer
+        that will never exist; the exchange's bounded timeout must turn
+        that deadlock into a clear error while the correctly-configured
+        hosts proceed."""
+        procs = spawn_hosts("""
+import time
+from repro.launch.multihost import exchange
+if ctx.process_id == 0:
+    # publish immediately (so the peer's first reads succeed), then keep
+    # the coordination service alive through the peer's bounded timeout
+    vals = exchange("h0", ctx, tag="mismatch")
+    time.sleep(12)
+    emit({"pid": 0, "vals_seen": len(vals)})
+else:
+    # this host believes the cluster has 3 processes
+    from repro.launch.multihost import DistContext
+    wrong = DistContext(1, 3, ctx.coordinator, True)
+    try:
+        exchange("h1", wrong, tag="mismatch", timeout_ms=6000)
+    except RuntimeError as e:
+        msg = str(e)
+        assert "process 2" in msg and "num_processes" in msg, msg
+        emit({"pid": 1, "failed_fast": True})
+        raise SystemExit(3)
+    raise SystemExit("mismatched exchange unexpectedly succeeded")
+""", n_hosts=2, num_processes=[2, 2], init_timeout=60)
+        results = collect_hosts(procs, timeout=240)
+        rc0, out0 = results[0]
+        rc1, out1 = results[1]
+        assert rc0 == 0, out0[-2000:]
+        assert rc1 == 3, out1[-2000:]
+        assert '"failed_fast": true' in out1

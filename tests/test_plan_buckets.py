@@ -332,8 +332,8 @@ class TestCompileOnce:
 class TestMeshBuckets:
     @pytest.mark.slow
     def test_bucketed_decode_on_8_devices(self):
-        import test_distribution as TD
-        out = TD.run_sub("""
+        from _multiproc import run_sub
+        out = run_sub("""
             import numpy as np, jax
             from repro.core import (ParallelDecoder, clear_decode_programs,
                                     decode_programs)
