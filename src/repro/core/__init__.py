@@ -3,9 +3,11 @@
 from .api import (DecodeOutput, DecodeProgram, ParallelDecoder,  # noqa: F401
                   clear_decode_programs, decode_batch, decode_program,
                   decode_program_stats, decode_programs)
-from .bitstream import (BatchPlan, PlanData, PlanShape,  # noqa: F401
-                        bucket_capacity, build_batch_plan, build_plan_data,
-                        consensus_plan, empty_batch_plan, merge_plan_shapes,
-                        plan_shape, split_plan)
+from .bitstream import (BatchPlan, BatchValidation, BlobReport,  # noqa: F401
+                        PlanData, PlanShape, STATUS_NAMES, STATUS_OK,
+                        STATUS_RECOVERED, STATUS_REJECTED, bucket_capacity,
+                        build_batch_plan, build_plan_data, consensus_plan,
+                        empty_batch_plan, merge_plan_shapes, plan_shape,
+                        split_plan, validate_batch, validate_blob)
 from .state import DecodeState  # noqa: F401
 from .sync import faithful_sync, jacobi_sync  # noqa: F401

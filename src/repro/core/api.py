@@ -44,8 +44,10 @@ from . import decode as D
 from ..dist import sharding as S
 from ..kernels.backend import check_backend, resolve_backend
 from ..jpeg.format import parse_jpeg, segment_byte_bounds, unstuff_scan
-from .bitstream import (BatchPlan, LADDER_STEP, PlanShape, bucket_capacity,
-                        build_batch_plan, build_plan_data, plan_shape)
+from .bitstream import (BatchPlan, BatchValidation, LADDER_STEP, PlanShape,
+                        STATUS_OK, bucket_capacity, build_batch_plan,
+                        build_plan_data, consensus_plan, plan_shape,
+                        validate_batch)
 from .state import DecodeState
 from .sync import SyncResult, faithful_sync, jacobi_sync, specmap_sync
 
@@ -103,6 +105,11 @@ class DecodeOutput:
     sync_rounds: int
     converged: bool
     plan: BatchPlan
+    # per-image STATUS_OK/RECOVERED/REJECTED (validated decodes only; the
+    # per-segment / per-unit validity masks ride on plan.seg_valid /
+    # plan.unit_valid)
+    status: Optional[object] = None     # (B,) int32 np.ndarray or None
+    validation: Optional[BatchValidation] = None
 
 
 def _sequential_chunk_bits(unstuffed, bucket: bool = True) -> int:
@@ -385,6 +392,51 @@ def _build_pixels_fn(sh: PlanShape, idct_impl, prog: DecodeProgram):
     return _pixels
 
 
+def _shape_covers(shape: PlanShape, plan: BatchPlan) -> bool:
+    """Whether ``plan`` can stream through a program compiled for ``shape``
+    bit-exactly: every trace constant matches (or relaxes soundly, the
+    ``consensus_plan`` argument), and every actual count fits the capacity."""
+    if (shape.chunk_bits != plan.chunk_bits
+            or shape.seq_chunks != plan.seq_chunks
+            or shape.n_lanes != plan.n_lanes
+            or shape.permuted != (plan.balance != "none")
+            or shape.n_images != plan.n_images
+            or shape.uniform != plan.uniform
+            or shape.geometry != plan.geometry):
+        return False
+    if shape.s_max < plan.s_max or shape.min_code_bits > plan.min_code_bits:
+        return False
+    counts = dict(n_words=len(plan.words), n_luts=plan.luts.shape[0],
+                  n_tablesets=plan.ts_upm.shape[0],
+                  n_matrices=plan.m_matrices.shape[0],
+                  n_segments=plan.n_segments, n_chunks=plan.n_chunks,
+                  n_sequences=plan.n_sequences, n_units=plan.total_units)
+    return all(v <= getattr(shape, k) for k, v in counts.items())
+
+
+def _quarantine_shape(plan: BatchPlan, own: PlanShape, sync: str,
+                      backend: str, interpret) -> PlanShape:
+    """Shape selection for a batch with quarantined images.
+
+    Quarantine removes the damaged images' compressed bits, so the batch's
+    own ladder rung can drop *below* the bucket its clean siblings stream
+    through — minting a fresh compile key for what is semantically the
+    same traffic. Instead, prefer an already-compiled shape (same sync/
+    backend key) that covers this plan; the program cache then stays
+    exactly as the clean stream left it. Falls back to ``own`` when
+    nothing compiled covers the plan.
+    """
+    best = None
+    for (shape, s, b, i) in _PROGRAMS.keys():
+        if (s, b, i) != (sync, backend, interpret):
+            continue
+        if not _shape_covers(shape, plan):
+            continue
+        if best is None or shape.n_words < best.n_words:
+            best = shape
+    return best if best is not None else own
+
+
 class ParallelDecoder:
     """A decoder handle for one batch: shared compiled program + this
     batch's padded plan data.
@@ -402,19 +454,31 @@ class ParallelDecoder:
                  idct_impl=None, backend: str = "jnp",
                  interpret: Optional[bool] = None,
                  bucket: bool = True, ladder_step: float = LADDER_STEP,
-                 shape: Optional[PlanShape] = None):
+                 shape: Optional[PlanShape] = None,
+                 validation: Optional[BatchValidation] = None):
         assert sync in ("jacobi", "faithful", "sequential", "specmap")
         check_backend(backend)
-        self.plan = plan
         self.sync = sync
         self.backend = backend
         self.interpret = interpret
+        self.validation = validation
         # an explicit shape pins the compile bucket from outside — the
         # multi-host consensus path (repro.launch.multihost) hands every
         # process the merged shape so all hosts trace the same program;
         # build_plan_data validates the plan actually fits it
-        self.shape = (shape if shape is not None
-                      else plan_shape(plan, bucket=bucket, step=ladder_step))
+        if shape is None:
+            shape = plan_shape(plan, bucket=bucket, step=ladder_step)
+            if (bucket and plan.image_status is not None
+                    and (plan.image_status != STATUS_OK).any()):
+                # quarantined batches borrow an existing compiled bucket
+                # that covers them, so quarantine never mints compile keys
+                shape = _quarantine_shape(plan, shape, sync, backend,
+                                          interpret)
+        if (shape.s_max, shape.min_code_bits, shape.n_images) != \
+                (plan.s_max, plan.min_code_bits, plan.n_images):
+            plan = consensus_plan(plan, shape)
+        self.plan = plan
+        self.shape = shape
         self.data = build_plan_data(plan, self.shape)
         self.program = decode_program(self.shape, sync=sync, backend=backend,
                                       interpret=interpret,
@@ -448,7 +512,8 @@ class ParallelDecoder:
                    interpret: Optional[bool] = None,
                    balance: str = "none",
                    lanes: Optional[int] = None,
-                   bucket: bool = True) -> "ParallelDecoder":
+                   bucket: bool = True,
+                   validate: bool = False) -> "ParallelDecoder":
         """Parse, plan, and compile a decoder for one batch.
 
         ``balance`` selects the plan-time lane partitioner
@@ -461,23 +526,42 @@ class ParallelDecoder:
         ``bucket`` (default) rounds the plan's capacities up the geometric
         ladder so a stream of distinct batches shares compiled programs;
         ``bucket=False`` compiles for the exact batch extents.
+
+        ``validate`` turns on resilient decode: damaged blobs never raise.
+        Each blob is classified (:func:`repro.core.bitstream.validate_batch`)
+        and rejected images are replaced by inert quarantine lanes while
+        recovered ones decode their surviving restart segments — the rest
+        of the batch decodes bit-identically to a clean batch. The
+        resulting :class:`DecodeOutput` carries the per-image ``status``.
         """
         from ..dist import plan as DP
         DP.check_balance(balance)
         backend = resolve_backend(backend, use_kernels)
-        images = [parse_jpeg(b) for b in blobs]
-        unstuffed = None
-        if sync == "sequential":
-            unstuffed = [unstuff_scan(img.scan_data) for img in images]
-            chunk_bits = _sequential_chunk_bits(unstuffed, bucket=bucket)
-        plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
-                                seq_chunks=seq_chunks, parsed=images,
-                                unstuffed=unstuffed)
+        validation = None
+        if validate:
+            validation = validate_batch(blobs)
+            if sync == "sequential":
+                live = [(r.clean, r.rst_bits) for r in validation.reports
+                        if r.clean is not None]
+                if live:
+                    chunk_bits = _sequential_chunk_bits(live, bucket=bucket)
+            plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
+                                    seq_chunks=seq_chunks,
+                                    validation=validation)
+        else:
+            images = [parse_jpeg(b) for b in blobs]
+            unstuffed = None
+            if sync == "sequential":
+                unstuffed = [unstuff_scan(img.scan_data) for img in images]
+                chunk_bits = _sequential_chunk_bits(unstuffed, bucket=bucket)
+            plan = build_batch_plan(blobs, chunk_bits=chunk_bits,
+                                    seq_chunks=seq_chunks, parsed=images,
+                                    unstuffed=unstuffed)
         if balance != "none":
             n_lanes = int(lanes) if lanes is not None else jax.device_count()
             plan = DP.balance_lanes(plan, n_lanes, balance)
         return cls(plan, sync=sync, idct_impl=idct_impl, backend=backend,
-                   interpret=interpret, bucket=bucket)
+                   interpret=interpret, bucket=bucket, validation=validation)
 
     # -- execution ------------------------------------------------------------
     def coefficients(self) -> DecodeOutput:
@@ -490,13 +574,20 @@ class ParallelDecoder:
             coeffs = _slice_units(coeffs, self.plan.total_units,
                                   S.trace_token())
         return DecodeOutput(coeffs, None, None, int(rounds), bool(conv),
-                            self.plan)
+                            self.plan, status=self.plan.image_status,
+                            validation=self.validation)
 
     def decode(self, emit: str = "rgb") -> DecodeOutput:
         out = self.coefficients()
         if emit == "coeffs":
             return out
         if not self.plan.uniform:
+            if self.plan.image_status is not None:
+                # validated decode: a batch can lose pixel-stage uniformity
+                # to quarantine (e.g. every image rejected) — degrade to
+                # coefficients instead of throwing, the status array tells
+                # the caller why
+                return out
             raise NotImplementedError(
                 "pixel stage requires a geometry-uniform batch; decode images "
                 "with mixed geometry via bucketing in repro.data.jpeg_pipeline"
@@ -555,6 +646,7 @@ def decode_batch(
     interpret: Optional[bool] = None,
     balance: str = "none",
     bucket: bool = True,
+    validate: bool = False,
 ) -> DecodeOutput:
     """One-shot convenience wrapper (builds the plan + compiles + decodes).
 
@@ -578,7 +670,7 @@ def decode_batch(
         backend=backend, use_kernels=use_kernels, interpret=interpret,
         balance=balance,
         lanes=(mesh.devices.size if mesh is not None else None),
-        bucket=bucket,
+        bucket=bucket, validate=validate,
     )
     if mesh is None:
         return dec.decode(emit=emit)

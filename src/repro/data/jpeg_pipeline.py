@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import ParallelDecoder
+from ..core import (ParallelDecoder, STATUS_OK, STATUS_RECOVERED,
+                    STATUS_REJECTED)
 from ..jpeg.encoder import Dataset
 
 
@@ -49,6 +50,11 @@ class JpegPipelineStats:
     decode_ms: float = 0.0        # wall ms of this batch's decode+embed
     compiled: bool = False        # this batch traced a decode program
     bucket: str = ""              # PlanShape label of the batch's bucket
+    # resilience (validate=True pipelines): per-image STATUS_* array and
+    # the batch's damaged-image counts
+    status: Optional[np.ndarray] = None   # (B,) int32 or None
+    images_recovered: int = 0
+    images_rejected: int = 0
 
     @property
     def transfer_saving(self) -> float:
@@ -63,13 +69,18 @@ class JpegVisionPipeline:
                  use_kernels: bool = False, backend: Optional[str] = None,
                  seed: int = 0, mesh=None, balance: str = "none",
                  decoder_cache_size: int = 16, bucket: bool = True,
-                 sync_stats: bool = False):
+                 sync_stats: bool = False, validate: bool = False):
         self.patch = patch
         self.embed_dim = embed_dim
         self.chunk_bits = chunk_bits
         self.sync = sync
         self.use_kernels = use_kernels
         self.backend = backend
+        # validate=True makes the stage resilient: damaged blobs are
+        # classified (never raised), rejected images decode as inert gray
+        # lanes, and per-batch stats carry a per-image status array plus
+        # running recovered/rejected counters (see docs/ROBUSTNESS.md)
+        self.validate = validate
         # with a mesh, decode work (chunk lanes / output units) is sharded
         # over the data axis — the input pipeline scales with the job;
         # balance ("roundrobin"/"lpt") redistributes skewed batches' chunk
@@ -109,6 +120,10 @@ class JpegVisionPipeline:
         self._warm_ms: List[float] = []
         self._buckets: Dict[str, int] = {}
         self._last: Optional[JpegPipelineStats] = None
+        # resilience counters (advance only under validate=True)
+        self._images_ok = 0
+        self._images_recovered = 0
+        self._images_rejected = 0
 
     @staticmethod
     def _batch_key(blobs: Sequence[bytes]) -> bytes:
@@ -133,7 +148,7 @@ class JpegVisionPipeline:
                 balance=self.balance,
                 lanes=(self.mesh.devices.size
                        if self.mesh is not None else None),
-                bucket=self.bucket)
+                bucket=self.bucket, validate=self.validate)
             if self._decoder_cache_size > 0:
                 self._decoders[key] = dec
                 while len(self._decoders) > self._decoder_cache_size:
@@ -152,17 +167,25 @@ class JpegVisionPipeline:
         else:
             out = dec.decode(emit="rgb")
         rgb = out.rgb  # (B, H, W, 3) uint8 on device
-        b, h, w, _ = rgb.shape
         p = self.patch
-        hc, wc = h // p, w // p
-        x = rgb[:, : hc * p, : wc * p].astype(jnp.bfloat16) / 255.0
-        x = x.reshape(b, hc, p, wc, p, 3).transpose(0, 1, 3, 2, 4, 5)
-        x = x.reshape(b, hc * wc, p * p * 3)
-        tokens = x @ self.w_embed
+        if rgb is None:
+            # validated decode with no pixel stage (every image quarantined,
+            # or mixed-geometry survivors): emit zero patch tokens per image
+            # so the stream keeps flowing — status tells the caller why
+            b, h, w = len(blobs), 0, 0
+            tokens = jnp.zeros((b, 0, self.embed_dim), dtype=jnp.bfloat16)
+        else:
+            b, h, w, _ = rgb.shape
+            hc, wc = h // p, w // p
+            x = rgb[:, : hc * p, : wc * p].astype(jnp.bfloat16) / 255.0
+            x = x.reshape(b, hc, p, wc, p, 3).transpose(0, 1, 3, 2, 4, 5)
+            x = x.reshape(b, hc * wc, p * p * 3)
+            tokens = x @ self.w_embed
         if self.sync_stats:
             jax.block_until_ready(tokens)
         dt_ms = (time.perf_counter() - t0) * 1e3
         compiled = dec.program.compiles > compiles_before
+        status = out.status
         stats = JpegPipelineStats(
             compressed_mb=sum(len(bb) for bb in blobs) / 1e6,
             decoded_mb=b * h * w * 3 / 1e6,
@@ -171,6 +194,11 @@ class JpegVisionPipeline:
             decode_ms=dt_ms,
             compiled=compiled,
             bucket=dec.shape.label(),
+            status=status,
+            images_recovered=(int((status == STATUS_RECOVERED).sum())
+                              if status is not None else 0),
+            images_rejected=(int((status == STATUS_REJECTED).sum())
+                             if status is not None else 0),
         )
         self._record(stats)
         return tokens, stats
@@ -182,6 +210,10 @@ class JpegVisionPipeline:
         log.append(stats.decode_ms)
         del log[:-100]  # bounded history for the medians
         self._buckets[stats.bucket] = self._buckets.get(stats.bucket, 0) + 1
+        if stats.status is not None:
+            self._images_ok += int((stats.status == STATUS_OK).sum())
+            self._images_recovered += stats.images_recovered
+            self._images_rejected += stats.images_rejected
         self._last = stats
 
     def decode_stats(self) -> Dict:
@@ -214,6 +246,12 @@ class JpegVisionPipeline:
             "active_bucket": last.bucket if last else "",
             "sync_rounds": last.sync_rounds if last else 0,
             "transfer_saving": last.transfer_saving if last else 0.0,
+            # resilience rollups (all zero unless validate=True); per
+            # process like everything else here — gather_decode_stats keeps
+            # them per-host, never summed
+            "images_ok": self._images_ok,
+            "images_recovered": self._images_recovered,
+            "images_rejected": self._images_rejected,
             "process_id": info.process_id,
             "process_count": info.num_processes,
         }

@@ -248,7 +248,7 @@ def plan_lane_loads(plan, n_lanes: int) -> np.ndarray:
 
 def local_batch_plan(local_blobs, *, chunk_bits: int = 1024,
                      seq_chunks: int = 32, balance: str = "none",
-                     lanes: Optional[int] = None):
+                     lanes: Optional[int] = None, validation=None):
     """Host-local planning for a multi-host launch: plan ONLY the bytes
     this process holds.
 
@@ -260,6 +260,12 @@ def local_batch_plan(local_blobs, *, chunk_bits: int = 1024,
     ``repro.launch.multihost.plan_consensus``). A host with zero local
     blobs gets the inert-lane-only ``empty_batch_plan`` so it still
     participates in the consensus and runs the shared compiled program.
+
+    ``validation`` (a ``core.bitstream.BatchValidation`` of the local
+    blobs) switches to resilient planning: this host's damaged blobs are
+    quarantined/recovered locally and never raise, so one corrupt feed
+    cannot take down a collective decode (the other hosts would deadlock
+    at the consensus barrier waiting for the dead process).
     """
     check_balance(balance)
     from ..core.bitstream import build_batch_plan, empty_batch_plan
@@ -267,7 +273,7 @@ def local_batch_plan(local_blobs, *, chunk_bits: int = 1024,
         plan = empty_batch_plan(chunk_bits=chunk_bits, seq_chunks=seq_chunks)
     else:
         plan = build_batch_plan(list(local_blobs), chunk_bits=chunk_bits,
-                                seq_chunks=seq_chunks)
+                                seq_chunks=seq_chunks, validation=validation)
     if balance != "none":
         n_lanes = (int(lanes) if lanes is not None
                    else len(jax.local_devices()))

@@ -1,4 +1,5 @@
 """JPEG substrate: format parsing, coding tables, reference codec."""
 
-from .format import JpegImage, parse_jpeg, write_jpeg  # noqa: F401
+from .format import (JpegFormatError, JpegImage,  # noqa: F401
+                     JpegTruncationError, parse_jpeg, write_jpeg)
 from .codec_ref import decode_baseline, encode_baseline  # noqa: F401

@@ -48,6 +48,7 @@ class JpegImage:
     huffman_specs: Dict[Tuple[str, int], HuffmanSpec]  # ("dc"/"ac", id) -> spec
     scan_data: bytes                              # entropy-coded, byte-stuffed
     restart_interval: int = 0                     # MCUs between RST markers (0=off)
+    truncated: bool = False                       # scan cut short (EOF before EOI)
 
     # --- Derived geometry -------------------------------------------------
     @property
@@ -167,13 +168,55 @@ def write_jpeg(
 # ---------------------------------------------------------------------------
 
 class JpegFormatError(ValueError):
-    pass
+    """Malformed JPEG container.
+
+    Every parser raise carries uniform diagnostics: ``offset`` is the byte
+    position in the blob at which the defect was detected, ``marker`` the
+    marker code (second byte, e.g. 0xC4 for DHT) being parsed when it was
+    — both ``None`` when genuinely unknowable. The validation layer
+    (``core.bitstream.validate_batch``) surfaces them per image.
+    """
+
+    def __init__(self, message: str, offset: Optional[int] = None,
+                 marker: Optional[int] = None):
+        ctx = []
+        if marker is not None:
+            ctx.append(f"marker 0xFF{marker:02X}")
+        if offset is not None:
+            ctx.append(f"byte {offset}")
+        super().__init__(message + (f" ({', '.join(ctx)})" if ctx else ""))
+        self.offset = offset
+        self.marker = marker
 
 
-def parse_jpeg(data: bytes) -> JpegImage:
-    """Parse a baseline (SOF0) JFIF stream into a JpegImage."""
+class JpegTruncationError(JpegFormatError):
+    """The stream ended before it was complete (EOF before EOI).
+
+    Raised for every truncation class: mid-marker, mid-segment-header,
+    header segment overrunning the data, and — unless the caller opts into
+    ``parse_jpeg(allow_truncated=True)`` — entropy-coded data with no
+    terminating marker. Distinct from a plain :class:`JpegFormatError` so
+    the resilience layer can tell "cut short" (a *prefix* may still
+    decode) from "structurally wrong".
+    """
+
+
+def parse_jpeg(data: bytes, *, allow_truncated: bool = False) -> JpegImage:
+    """Parse a baseline (SOF0) JFIF stream into a JpegImage.
+
+    Strict by default: any structural defect raises
+    :class:`JpegFormatError`, and any truncation — including entropy-coded
+    data that ends before a terminating marker — raises the typed
+    :class:`JpegTruncationError` (it used to fall through silently or
+    surface as an ``IndexError``). With ``allow_truncated=True`` a stream
+    whose *headers* are intact but whose entropy data is cut short returns
+    the partial image with ``truncated=True`` instead of raising — the
+    resilient-decode path uses this to recover the surviving restart
+    segments. Header truncation always raises: there is nothing decodable
+    without tables and geometry.
+    """
     if len(data) < 4 or data[0] != 0xFF or data[1] != M_SOI:
-        raise JpegFormatError("missing SOI")
+        raise JpegFormatError("missing SOI", offset=0)
     pos = 2
     quant_tables: Dict[int, np.ndarray] = {}
     huffman_specs: Dict[Tuple[str, int], HuffmanSpec] = {}
@@ -181,75 +224,155 @@ def parse_jpeg(data: bytes) -> JpegImage:
     width = height = 0
     restart_interval = 0
     scan_data: Optional[bytes] = None
+    truncated = False
+    saw_eoi = False
 
-    while pos < len(data):
-        if data[pos] != 0xFF:
-            raise JpegFormatError(f"expected marker at {pos}, got {data[pos]:#x}")
-        marker = data[pos + 1]
-        pos += 2
-        if marker == M_EOI:
-            break
-        if marker == M_SOI or (M_RST0 <= marker <= M_RST0 + 7):
-            continue  # parameterless
-        seg_len = int.from_bytes(data[pos : pos + 2], "big")
-        payload = data[pos + 2 : pos + seg_len]
-        if marker == M_DQT:
-            p = 0
-            while p < len(payload):
-                pq, tq = payload[p] >> 4, payload[p] & 0xF
-                p += 1
-                if pq != 0:
-                    raise JpegFormatError("16-bit quant tables unsupported")
-                zz = np.frombuffer(payload[p : p + 64], dtype=np.uint8).astype(np.int32)
-                q = np.zeros(64, dtype=np.int32)
-                q[ZIGZAG[np.arange(64)]] = zz  # wire is zig-zag order
-                quant_tables[tq] = q
-                p += 64
-        elif marker == M_DHT:
-            p = 0
-            while p < len(payload):
-                tc, th = payload[p] >> 4, payload[p] & 0xF
-                p += 1
-                bits = np.frombuffer(payload[p : p + 16], dtype=np.uint8).astype(np.int32)
-                p += 16
-                n = int(bits.sum())
-                vals = np.frombuffer(payload[p : p + n], dtype=np.uint8).astype(np.int32)
-                p += n
-                huffman_specs[("dc" if tc == 0 else "ac", th)] = HuffmanSpec(bits, vals)
-        elif marker == M_SOF0:
-            height = int.from_bytes(payload[1:3], "big")
-            width = int.from_bytes(payload[3:5], "big")
-            ncomp = payload[5]
-            for i in range(ncomp):
-                cid, hv, tq = payload[6 + 3 * i : 9 + 3 * i]
-                components.append(ComponentInfo(cid, hv >> 4, hv & 0xF, tq))
-        elif marker in (0xC1, 0xC2, 0xC3, 0xC5, 0xC6, 0xC7, 0xC9, 0xCA, 0xCB,
-                        0xCD, 0xCE, 0xCF):
-            raise JpegFormatError(
-                f"non-baseline SOF marker 0xFF{marker:02X} unsupported (baseline only)"
-            )
-        elif marker == M_DRI:
-            restart_interval = int.from_bytes(payload[:2], "big")
-        elif marker == M_SOS:
-            ns = payload[0]
-            for i in range(ns):
-                cs, tables = payload[1 + 2 * i], payload[2 + 2 * i]
-                for c in components:
-                    if c.comp_id == cs:
-                        c.dc_table = tables >> 4
-                        c.ac_table = tables & 0xF
-                        break
-                else:
-                    raise JpegFormatError(f"SOS references unknown component {cs}")
-            # Entropy-coded data runs until the next non-RST marker.
-            scan_start = pos + seg_len
-            scan_data, pos = _extract_scan(data, scan_start)
-            continue  # pos already advanced past the scan
-        pos += seg_len
+    try:
+        while pos < len(data):
+            if data[pos] != 0xFF:
+                raise JpegFormatError(
+                    f"expected marker, got {data[pos]:#x}", offset=pos)
+            if pos + 1 >= len(data):
+                raise JpegTruncationError("stream ends mid-marker", offset=pos)
+            marker = data[pos + 1]
+            pos += 2
+            if marker == M_EOI:
+                saw_eoi = True
+                break
+            if marker == M_SOI or (M_RST0 <= marker <= M_RST0 + 7):
+                continue  # parameterless
+            if pos + 2 > len(data):
+                raise JpegTruncationError(
+                    "stream ends mid-segment-length", offset=pos, marker=marker)
+            seg_len = int.from_bytes(data[pos : pos + 2], "big")
+            if seg_len < 2:
+                raise JpegFormatError(
+                    f"segment length {seg_len} < 2", offset=pos, marker=marker)
+            if pos + seg_len > len(data):
+                raise JpegTruncationError(
+                    f"segment length {seg_len} overruns end of data",
+                    offset=pos, marker=marker)
+            payload = data[pos + 2 : pos + seg_len]
+            if marker == M_DQT:
+                p = 0
+                while p < len(payload):
+                    pq, tq = payload[p] >> 4, payload[p] & 0xF
+                    p += 1
+                    if pq != 0:
+                        raise JpegFormatError("16-bit quant tables unsupported",
+                                              offset=pos + 1 + p, marker=marker)
+                    if p + 64 > len(payload):
+                        raise JpegFormatError(
+                            f"DQT payload too short for table {tq} "
+                            f"(need 64 bytes, have {len(payload) - p})",
+                            offset=pos + 1 + p, marker=marker)
+                    zz = np.frombuffer(payload[p : p + 64], dtype=np.uint8).astype(np.int32)
+                    q = np.zeros(64, dtype=np.int32)
+                    q[ZIGZAG[np.arange(64)]] = zz  # wire is zig-zag order
+                    quant_tables[tq] = q
+                    p += 64
+            elif marker == M_DHT:
+                p = 0
+                while p < len(payload):
+                    tc, th = payload[p] >> 4, payload[p] & 0xF
+                    p += 1
+                    if p + 16 > len(payload):
+                        raise JpegFormatError(
+                            f"DHT payload too short for the 16 code-length "
+                            f"counts of table ({tc},{th})",
+                            offset=pos + 1 + p, marker=marker)
+                    bits = np.frombuffer(payload[p : p + 16], dtype=np.uint8).astype(np.int32)
+                    p += 16
+                    n = int(bits.sum())
+                    if p + n > len(payload):
+                        raise JpegFormatError(
+                            f"DHT payload too short for {n} values of table "
+                            f"({tc},{th}) (have {len(payload) - p})",
+                            offset=pos + 1 + p, marker=marker)
+                    vals = np.frombuffer(payload[p : p + n], dtype=np.uint8).astype(np.int32)
+                    p += n
+                    huffman_specs[("dc" if tc == 0 else "ac", th)] = HuffmanSpec(bits, vals)
+            elif marker == M_SOF0:
+                if len(payload) < 6:
+                    raise JpegFormatError(
+                        f"SOF0 payload too short ({len(payload)} bytes)",
+                        offset=pos, marker=marker)
+                height = int.from_bytes(payload[1:3], "big")
+                width = int.from_bytes(payload[3:5], "big")
+                ncomp = payload[5]
+                if len(payload) < 6 + 3 * ncomp:
+                    raise JpegFormatError(
+                        f"SOF0 payload too short for {ncomp} components",
+                        offset=pos, marker=marker)
+                for i in range(ncomp):
+                    cid, hv, tq = payload[6 + 3 * i : 9 + 3 * i]
+                    components.append(ComponentInfo(cid, hv >> 4, hv & 0xF, tq))
+            elif marker in (0xC1, 0xC2, 0xC3, 0xC5, 0xC6, 0xC7, 0xC9, 0xCA, 0xCB,
+                            0xCD, 0xCE, 0xCF):
+                raise JpegFormatError(
+                    f"non-baseline SOF marker 0xFF{marker:02X} unsupported "
+                    f"(baseline only)", offset=pos - 2, marker=marker)
+            elif marker == M_DRI:
+                if len(payload) < 2:
+                    raise JpegFormatError("DRI payload too short",
+                                          offset=pos, marker=marker)
+                restart_interval = int.from_bytes(payload[:2], "big")
+            elif marker == M_SOS:
+                if len(payload) < 1:
+                    raise JpegFormatError("SOS payload empty",
+                                          offset=pos, marker=marker)
+                ns = payload[0]
+                if len(payload) < 1 + 2 * ns + 3:
+                    raise JpegFormatError(
+                        f"SOS payload too short for {ns} components",
+                        offset=pos, marker=marker)
+                for i in range(ns):
+                    cs, tables = payload[1 + 2 * i], payload[2 + 2 * i]
+                    for c in components:
+                        if c.comp_id == cs:
+                            c.dc_table = tables >> 4
+                            c.ac_table = tables & 0xF
+                            break
+                    else:
+                        raise JpegFormatError(
+                            f"SOS references unknown component {cs}",
+                            offset=pos + 1 + 2 * i, marker=marker)
+                # Entropy-coded data runs until the next non-RST marker.
+                scan_start = pos + seg_len
+                scan_data, pos, complete = _extract_scan(data, scan_start)
+                if not complete:
+                    # entropy data ran to EOF with no terminating marker
+                    if not allow_truncated:
+                        raise JpegTruncationError(
+                            "entropy-coded data ends before EOI",
+                            offset=len(data), marker=M_SOS)
+                    truncated = True
+                    break
+                continue  # pos already advanced past the scan
+            pos += seg_len
+    except JpegFormatError:
+        # Damage *after* a complete scan (e.g. a mangled RST marker
+        # terminated the scan early, leaving bytes no marker loop can
+        # parse): under allow_truncated the scan prefix is still
+        # recoverable, so degrade to a truncated image instead of
+        # rejecting. Errors before any scan always propagate.
+        if not allow_truncated or scan_data is None:
+            raise
+        truncated = True
     if scan_data is None:
-        raise JpegFormatError("no SOS/scan found")
+        if not saw_eoi:
+            raise JpegTruncationError(
+                "stream ends before any SOS", offset=len(data))
+        raise JpegFormatError("no SOS/scan found", offset=pos)
     if not components:
-        raise JpegFormatError("no SOF0 found")
+        raise JpegFormatError("no SOF0 found", offset=pos)
+    if not truncated and not saw_eoi and pos >= len(data):
+        # the scan terminated at a marker, but the stream ended before it
+        # could be read as EOI
+        if not allow_truncated:
+            raise JpegTruncationError("stream ends before EOI",
+                                      offset=len(data))
+        truncated = True
     return JpegImage(
         width=width,
         height=height,
@@ -258,26 +381,28 @@ def parse_jpeg(data: bytes) -> JpegImage:
         huffman_specs=huffman_specs,
         scan_data=scan_data,
         restart_interval=restart_interval,
+        truncated=truncated,
     )
 
 
-def _extract_scan(data: bytes, start: int) -> Tuple[bytes, int]:
-    """Return (scan bytes incl. RST markers and stuffing, position of next marker)."""
+def _extract_scan(data: bytes, start: int) -> Tuple[bytes, int, bool]:
+    """Return (scan bytes incl. RST markers and stuffing, position of the
+    next marker, complete). ``complete`` is False when the data ended
+    before any terminating (non-RST, non-stuffing) marker — the truncated-
+    entropy-data case the resilient parse path recovers from."""
     buf = np.frombuffer(data, dtype=np.uint8)
-    pos = start
     n = len(data)
     # Vectorized search: candidate marker positions are 0xFF followed by a byte
     # that is neither 0x00 (stuffing) nor RSTn.
     ff = np.where(buf[start:] == 0xFF)[0] + start
     for f in ff:
         if f + 1 >= n:
-            pos = n
             break
         nxt = buf[f + 1]
         if nxt == 0x00 or (M_RST0 <= nxt <= M_RST0 + 7):
             continue
-        return data[start:f], int(f)
-    return data[start:n], n
+        return data[start:f], int(f), True
+    return data[start:n], n, False
 
 
 # ---------------------------------------------------------------------------

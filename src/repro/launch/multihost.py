@@ -45,9 +45,9 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core.api import DecodeOutput, ParallelDecoder, _sequential_chunk_bits
-from ..core.bitstream import (BatchPlan, ImageGeometry, PlanShape,
-                              bucket_capacity, consensus_plan,
-                              merge_plan_shapes, plan_shape)
+from ..core.bitstream import (BatchPlan, BatchValidation, ImageGeometry,
+                              PlanShape, bucket_capacity, consensus_plan,
+                              merge_plan_shapes, plan_shape, validate_batch)
 from ..jpeg.format import parse_jpeg, unstuff_scan
 
 _WIRE_VERSION = 1
@@ -408,17 +408,19 @@ class HostFeed:
 
 def host_plan(local_blobs: Sequence[bytes], *, chunk_bits: int = 1024,
               seq_chunks: int = 32, balance: str = "none",
-              lanes: Optional[int] = None) -> BatchPlan:
+              lanes: Optional[int] = None,
+              validation: Optional[BatchValidation] = None) -> BatchPlan:
     """Plan this host's local blobs (inert-only plan when it has none).
 
     Thin re-export of :func:`repro.dist.plan.local_batch_plan` — the
     planner lives with the other plan machinery; this module owns the
-    exchange/consensus protocol around it.
+    exchange/consensus protocol around it. ``validation`` switches to
+    resilient planning (damaged local blobs quarantined, never raised).
     """
     from ..dist.plan import local_batch_plan
     return local_batch_plan(local_blobs, chunk_bits=chunk_bits,
                             seq_chunks=seq_chunks, balance=balance,
-                            lanes=lanes)
+                            lanes=lanes, validation=validation)
 
 
 def plan_consensus(plan: BatchPlan, ctx: DistContext,
@@ -460,6 +462,12 @@ class MultiHostDecodeOutput:
     unit_counts: List[int]
     global_coeffs: Optional[object] = None
     compiles: int = 0
+    # resilient decodes (validate=True): this host's per-image STATUS_*
+    # array, and every host's status list in process order (tiny ints over
+    # the coordination service — damage is reportable cluster-wide without
+    # moving pixels)
+    status: Optional[np.ndarray] = None
+    host_statuses: Optional[List[List[int]]] = None
 
 
 def assemble_global_coeffs(coeffs, shape: PlanShape, ctx: DistContext):
@@ -491,6 +499,7 @@ def decode_multihost(local_blobs: Sequence[bytes],
                      balance: str = "none", lanes: Optional[int] = None,
                      emit: str = "coeffs", mesh: str = "local",
                      assemble: bool = True, tag: Optional[str] = None,
+                     validate: bool = False,
                      timeout_ms: int = 120_000) -> MultiHostDecodeOutput:
     """Decode one global batch whose bytes are spread across hosts.
 
@@ -506,6 +515,14 @@ def decode_multihost(local_blobs: Sequence[bytes],
     single-device. The decode never requires a cross-host XLA computation;
     ``assemble`` controls whether the per-host outputs are additionally
     laid out as one host-sharded global array (coeffs only).
+
+    ``validate=True`` (must agree across hosts — it changes the exchange
+    schedule) classifies each local blob before planning: a damaged blob
+    is quarantined or partially recovered host-locally and NEVER raises.
+    This is load-bearing in a collective decode — one host dying on a
+    corrupt feed would strand every peer at the consensus exchange until
+    timeout. Per-image statuses ride the result (``status``,
+    ``host_statuses``).
     """
     if ctx is None:
         ctx = process_info()
@@ -516,12 +533,23 @@ def decode_multihost(local_blobs: Sequence[bytes],
     from ..kernels.backend import resolve_backend
     backend = resolve_backend(backend, use_kernels)
 
+    validation: Optional[BatchValidation] = None
+    if validate:
+        validation = validate_batch(local_blobs)
+
     if sync == "sequential":
         # settle the data-dependent framing constant first: every host
         # proposes the ladder-rounded chunk size its local segments need,
         # the consensus is the max — identical to what a single process
         # holding the whole corpus would compute
-        if local_blobs:
+        if validation is not None:
+            # size from the surviving scans only; a raw parse here would
+            # re-raise on exactly the damaged blobs validation absorbed
+            live = [(r.clean, r.rst_bits) for r in validation.reports
+                    if r.clean is not None]
+            mine = (_sequential_chunk_bits(live, bucket=True) if live
+                    else -(-bucket_capacity(32) // 32) * 32)
+        elif local_blobs:
             unstuffed = [unstuff_scan(parse_jpeg(b).scan_data)
                          for b in local_blobs]
             mine = _sequential_chunk_bits(unstuffed, bucket=True)
@@ -532,7 +560,8 @@ def decode_multihost(local_blobs: Sequence[bytes],
         chunk_bits = max(int(v) for v in votes)
 
     plan = host_plan(local_blobs, chunk_bits=chunk_bits,
-                     seq_chunks=seq_chunks, balance=balance, lanes=lanes)
+                     seq_chunks=seq_chunks, balance=balance, lanes=lanes,
+                     validation=validation)
     plan, merged = plan_consensus(plan, ctx, f"{tag}/shape",
                                   timeout_ms=timeout_ms)
 
@@ -552,6 +581,14 @@ def decode_multihost(local_blobs: Sequence[bytes],
                       timeout_ms=timeout_ms)
     unit_counts = [int(c) for c in counts]
 
+    status = None
+    host_statuses = None
+    if validation is not None:
+        status = validation.status
+        wires = exchange(json.dumps([int(s) for s in status]), ctx,
+                         f"{tag}/status", timeout_ms=timeout_ms)
+        host_statuses = [json.loads(w) for w in wires]
+
     global_coeffs = None
     if assemble and ctx.initialized:
         global_coeffs = assemble_global_coeffs(out.coeffs, merged, ctx)
@@ -559,7 +596,8 @@ def decode_multihost(local_blobs: Sequence[bytes],
     return MultiHostDecodeOutput(
         local=out, shape=merged, process_id=ctx.process_id,
         num_processes=ctx.num_processes, unit_counts=unit_counts,
-        global_coeffs=global_coeffs, compiles=dec.program.compiles)
+        global_coeffs=global_coeffs, compiles=dec.program.compiles,
+        status=status, host_statuses=host_statuses)
 
 
 # ---------------------------------------------------------------------------

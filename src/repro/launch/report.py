@@ -42,9 +42,16 @@ def render_decode_stats(stats: dict) -> str:
     out.append("### Decode stream (plan buckets)\n")
     hosts = stats.get("hosts")
     per_host = hosts if hosts else [stats]
+    # resilience columns appear only when some host actually saw damage —
+    # clean streams keep the familiar narrow table
+    damaged = any(st.get("images_recovered", 0) or st.get("images_rejected", 0)
+                  for st in per_host)
     cols = "| batches | compiles | cold step | warm step | sync rounds " \
            "| transfer saving | active bucket |"
     sep = "|---|---|---|---|---|---|---|"
+    if damaged:
+        cols += " ok | recovered | rejected |"
+        sep += "---|---|---|"
     if hosts:
         cols = "| host " + cols
         sep = "|---" + sep
@@ -58,6 +65,10 @@ def render_decode_stats(stats: dict) -> str:
             f"| {st.get('sync_rounds', 0)} "
             f"| {st.get('transfer_saving', 0.0):.1f}x "
             f"| `{st.get('active_bucket', '')}` |")
+        if damaged:
+            row += (f" {st.get('images_ok', 0)} "
+                    f"| {st.get('images_recovered', 0)} "
+                    f"| {st.get('images_rejected', 0)} |")
         if hosts:
             row = (f"| {st.get('process_id', 0)}/"
                    f"{st.get('process_count', 1)} " + row)

@@ -1,0 +1,181 @@
+"""Deterministic JPEG corruption corpus for the resilience suite.
+
+Every generator here is a pure function of (blob, seed): the corpus a CI
+run fuzzes is byte-identical to the one a local run fuzzes, so a failure
+reproduces from its printed variant name alone. Base images come from
+encoder round-trips (tests/conftest.synth_image -> codec_ref.encode_baseline),
+so each corruption starts from a blob the decoder is known to handle.
+
+Families (ISSUE-6 satellite #2):
+  * truncation at every structural marker boundary (and mid-scan cuts),
+  * bit flips inside the entropy-coded scan,
+  * mangled DQT/DHT/SOF/DRI segment lengths,
+  * duplicated / missing / renumbered RST markers.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.jpeg import codec_ref as cr
+from repro.jpeg.format import (M_DHT, M_DQT, M_DRI, M_EOI, M_RST0, M_SOF0,
+                               M_SOI, M_SOS)
+
+Variant = Tuple[str, bytes]
+
+
+# ---------------------------------------------------------------------------
+# Structure walking (independent of parse_jpeg so the corpus still builds
+# when the parser under test is the thing being broken)
+# ---------------------------------------------------------------------------
+
+def marker_map(blob: bytes) -> List[Tuple[int, int]]:
+    """[(marker, offset)] of structural markers up to and including SOS.
+
+    ``offset`` is the position of the segment's 0xFF byte. The walk uses
+    the declared segment lengths, exactly like a conforming reader, and
+    stops at SOS (the scan has no length field).
+    """
+    if len(blob) < 2 or blob[0] != 0xFF or blob[1] != M_SOI:
+        raise ValueError("not a JPEG: missing SOI")
+    out = [(M_SOI, 0)]
+    pos = 2
+    while pos + 3 < len(blob):
+        if blob[pos] != 0xFF:
+            raise ValueError(f"lost marker sync at byte {pos}")
+        marker = blob[pos + 1]
+        out.append((marker, pos))
+        if marker == M_SOS:
+            return out
+        seg_len = int.from_bytes(blob[pos + 2: pos + 4], "big")
+        pos += 2 + seg_len
+    raise ValueError("no SOS before end of stream")
+
+
+def scan_span(blob: bytes) -> Tuple[int, int]:
+    """(start, end) of the entropy-coded bytes: after the SOS header,
+    before the trailing EOI marker."""
+    sos_off = dict(marker_map(blob))[M_SOS]
+    sos_len = int.from_bytes(blob[sos_off + 2: sos_off + 4], "big")
+    start = sos_off + 2 + sos_len
+    assert blob[-2:] == bytes([0xFF, M_EOI]), "encoder always ends with EOI"
+    return start, len(blob) - 2
+
+
+def rst_offsets(blob: bytes) -> List[int]:
+    """Offsets of RST marker 0xFF bytes inside the scan."""
+    start, end = scan_span(blob)
+    buf = np.frombuffer(blob, dtype=np.uint8)[start:end]
+    ff = buf[:-1] == 0xFF
+    rst = ff & (buf[1:] >= M_RST0) & (buf[1:] <= M_RST0 + 7)
+    return [start + int(i) for i in np.where(rst)[0]]
+
+
+# ---------------------------------------------------------------------------
+# Corruption families
+# ---------------------------------------------------------------------------
+
+def truncations(blob: bytes) -> List[Variant]:
+    """Cut the stream at every marker boundary + inside the scan.
+
+    Per marker: cut before the marker, after the 0xFF (mid-marker), and
+    two bytes into the segment (mid-length-field). Scan cuts at quarter
+    points exercise partial restart-segment recovery.
+    """
+    out: List[Variant] = []
+    for marker, off in marker_map(blob):
+        for delta, tag in ((0, "before"), (1, "mid-marker"), (3, "mid-len")):
+            cut = off + delta
+            if 0 < cut < len(blob):
+                out.append((f"trunc@0xFF{marker:02X}+{tag}", blob[:cut]))
+    start, end = scan_span(blob)
+    for q in (1, 2, 3):
+        cut = start + (end - start) * q // 4
+        if cut > start:
+            out.append((f"trunc@scan-{q}/4", blob[:cut]))
+    return out
+
+
+def bit_flips(blob: bytes, seed: int = 0, n: int = 8) -> List[Variant]:
+    """Flip one bit at ``n`` rng-chosen positions in the entropy data
+    (one variant per flip — each stresses Huffman desync differently)."""
+    start, end = scan_span(blob)
+    rng = np.random.default_rng(seed)
+    out: List[Variant] = []
+    for k in range(n):
+        pos = int(rng.integers(start, end))
+        bit = int(rng.integers(8))
+        bad = bytearray(blob)
+        bad[pos] ^= 1 << bit
+        out.append((f"flip@{pos}.{bit}#s{seed}.{k}", bytes(bad)))
+    return out
+
+
+def mangled_lengths(blob: bytes) -> List[Variant]:
+    """Rewrite DQT/DHT/SOF0/DRI length fields: zero, undersized by one,
+    oversized by one, and huge (points past the end of the stream)."""
+    targets = {M_DQT: "DQT", M_DHT: "DHT", M_SOF0: "SOF0", M_DRI: "DRI"}
+    out: List[Variant] = []
+    seen = set()
+    for marker, off in marker_map(blob):
+        if marker not in targets or marker in seen:
+            continue
+        seen.add(marker)  # first instance per kind keeps the corpus small
+        true_len = int.from_bytes(blob[off + 2: off + 4], "big")
+        for new_len, tag in ((0, "zero"), (true_len - 1, "short"),
+                             (true_len + 1, "long"), (0xFFFF, "huge")):
+            bad = bytearray(blob)
+            bad[off + 2: off + 4] = int(new_len).to_bytes(2, "big")
+            out.append((f"len-{tag}@{targets[marker]}", bytes(bad)))
+    return out
+
+
+def rst_mutations(blob: bytes) -> List[Variant]:
+    """Drop, duplicate, and renumber restart markers (empty list when the
+    blob was encoded without restarts)."""
+    offs = rst_offsets(blob)
+    if not offs:
+        return []
+    out: List[Variant] = []
+    mid = offs[len(offs) // 2]
+    out.append(("rst-missing", blob[:mid] + blob[mid + 2:]))
+    out.append(("rst-duplicated", blob[:mid] + blob[mid: mid + 2] + blob[mid:]))
+    bad = bytearray(blob)
+    bad[mid + 1] = M_RST0 + ((blob[mid + 1] - M_RST0 + 3) % 8)  # wrong index
+    out.append(("rst-renumbered", bytes(bad)))
+    bad = bytearray(blob)
+    bad[mid + 1] = 0xC9  # not a RST at all: terminates the scan early
+    out.append(("rst-to-marker", bytes(bad)))
+    return out
+
+
+def corpus(blob: bytes, seed: int = 0, flips: int = 8) -> List[Variant]:
+    """The full deterministic corpus for one blob."""
+    return (truncations(blob) + bit_flips(blob, seed=seed, n=flips)
+            + mangled_lengths(blob) + rst_mutations(blob))
+
+
+# ---------------------------------------------------------------------------
+# Base blobs (encoder round-trips)
+# ---------------------------------------------------------------------------
+
+def base_blobs(synth_image, size=(32, 32)) -> List[Tuple[str, bytes]]:
+    """Known-good encoder round-trips covering the corpus axes that change
+    stream structure: restart intervals (on/off), subsampling, optimized
+    Huffman tables."""
+    h, w = size
+    return [
+        ("plain", cr.encode_baseline(
+            synth_image(h, w, seed=11), quality=85,
+            subsampling="4:4:4").jpeg_bytes),
+        ("rst2", cr.encode_baseline(
+            synth_image(h, w, seed=12), quality=85, subsampling="4:4:4",
+            restart_interval=2).jpeg_bytes),
+        ("420-rst1", cr.encode_baseline(
+            synth_image(h, w, seed=13), quality=75, subsampling="4:2:0",
+            restart_interval=1).jpeg_bytes),
+        ("opt-huff", cr.encode_baseline(
+            synth_image(h, w, seed=14), quality=90, subsampling="4:4:4",
+            restart_interval=2, optimize_huffman=True).jpeg_bytes),
+    ]
