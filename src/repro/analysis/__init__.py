@@ -1,0 +1,32 @@
+"""Static analysis for the decode pipeline: AST lint + jaxpr contracts.
+
+Two layers (see docs/ANALYSIS.md):
+
+``repro.analysis.lint``
+    An AST linter with repo-specific rules over ``src/repro`` — the bug
+    classes our PR history actually hit (host syncs inside traced code,
+    recompile-storm closures, host-divergent collectives, swallowed
+    format errors, f64 promotion). Run as ``python -m repro.analysis
+    lint``; suppress with ``# repro: allow[rule]`` or the checked-in
+    baseline (``analysis/baseline.txt``).
+
+``repro.analysis.jaxpr_check``
+    A contract checker over the *traced* decode programs: for a tier-0
+    grid of PlanShapes x sync schedules x backends it walks the jaxprs
+    and asserts lowering contracts declared as data in
+    ``repro.analysis.contracts`` (lane-graph deadness on identity plans,
+    no f64, no host callbacks, ``words`` donation, collective
+    accounting, int32 index lattice). Run as ``python -m repro.analysis
+    contracts``.
+
+This package deliberately imports nothing from the rest of ``repro`` at
+module scope: ``contracts`` is stdlib-only so ``core.bitstream`` can use
+its checked-int32 helpers without an import cycle, and ``jaxpr_check``
+(which imports jax and ``repro.core``) is loaded lazily by the CLI.
+"""
+from __future__ import annotations
+
+from . import contracts  # stdlib-only, safe everywhere
+from .lint import Finding, lint_paths, lint_source  # ast/stdlib-only
+
+__all__ = ["contracts", "Finding", "lint_paths", "lint_source"]

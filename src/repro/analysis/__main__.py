@@ -1,0 +1,93 @@
+"""CLI: ``python -m repro.analysis {lint,contracts}``.
+
+``lint`` is stdlib-only (never imports jax). ``contracts`` traces real
+decode programs, so it forces a 2-device CPU topology *before* jax
+initializes — which is why the jaxpr checker must be entered through
+this module (or any fresh process that sets XLA_FLAGS first), never
+imported into an already-initialized jax process expecting multi-device
+cells to work.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+
+def _default_root() -> Path:
+    # src/repro, located from this file so the CLI works from any cwd
+    return Path(__file__).resolve().parent.parent
+
+
+def _default_baseline() -> Path:
+    return Path(__file__).resolve().parent / "baseline.txt"
+
+
+def _cmd_lint(args) -> int:
+    from .lint import apply_baseline, lint_paths, load_baseline
+
+    root = _default_root()
+    paths = [Path(p) for p in args.paths] or [root]
+    findings = lint_paths(paths, root=root.parent)
+    stale = []
+    if args.baseline is not None:
+        baseline_path = Path(args.baseline) if args.baseline else \
+            _default_baseline()
+        baseline = load_baseline(baseline_path)
+        findings, stale = apply_baseline(findings, baseline)
+        for key in stale:
+            # stale entries fail too: a baseline that no longer matches
+            # reality silently whitelists the next real finding at that key
+            print(f"stale baseline entry (no longer fires): {key}")
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(f"{n} finding{'s' if n != 1 else ''}"
+          + (" (after baseline)" if args.baseline is not None else "")
+          + (f", {len(stale)} stale baseline entr"
+             f"{'ies' if len(stale) != 1 else 'y'}" if stale else ""))
+    return 1 if findings or stale else 0
+
+
+def _cmd_contracts(args) -> int:
+    # Force a small multi-device CPU topology for the mesh/collectives
+    # cells. Must happen before any jax import in this process.
+    if "jax" in sys.modules:
+        print("warning: jax already imported; collective cells may see "
+              "a single device", file=sys.stderr)
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from . import jaxpr_check
+    return jaxpr_check.run(self_test=args.self_test, verbose=args.verbose)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="decode-pipeline static analysis (docs/ANALYSIS.md)")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pl = sub.add_parser("lint", help="AST lint over src/repro")
+    pl.add_argument("paths", nargs="*", help="files/dirs (default: src/repro)")
+    pl.add_argument("--baseline", nargs="?", const="", default=None,
+                    metavar="FILE",
+                    help="filter findings through the checked-in baseline "
+                         "(default file: analysis/baseline.txt)")
+    pl.set_defaults(fn=_cmd_lint)
+
+    pc = sub.add_parser("contracts",
+                        help="jaxpr contract checker over the tier-0 grid")
+    pc.add_argument("--self-test", action="store_true",
+                    help="also prove the checker catches a seeded "
+                         "violation (gather injected into an identity "
+                         "lowering)")
+    pc.add_argument("--verbose", action="store_true")
+    pc.set_defaults(fn=_cmd_contracts)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,292 @@
+"""Decode-pipeline invariants declared as data.
+
+This module is the single home for the numeric and lowering contracts
+that the rest of the repo previously enforced with scattered one-off
+asserts:
+
+* **Checked int32 arithmetic** — :func:`checked_int32` /
+  :func:`checked_coeff_capacity` generalize PR 3's ad-hoc
+  ``total_units * 64 >= 2**31`` guard in ``build_batch_plan``. The same
+  helpers back the *runtime* guards in ``core.bitstream`` (plan build,
+  shape bucketing, multi-host shape merge) and the *static* lattice the
+  jaxpr contract checker evaluates over whole shape grids.
+
+* **An int32 interval lattice** — :class:`IntRange` plus
+  :func:`plan_index_ranges`, which bounds every index expression the
+  compiled decoder computes in int32 (write offsets, bit positions,
+  word fetches) as a function of a ``PlanShape``'s capacities.
+
+* **Lane-graph liveness** — :data:`IDENTITY_LIVE_OK`, the per-sync
+  table of which lane-graph operands (``chunk_prev`` / ``chunk_next`` /
+  ``lane_perm`` / ``chunk_order``) an *identity* (``permuted=False``)
+  program may consume. The jaxpr checker taints these inputs and walks
+  the trace; a gather/scatter indexed by a non-allowed lane-graph value
+  in an identity program is the PR 3 "gather creep" regression.
+
+Import policy: **stdlib only**. ``core.bitstream`` imports this module
+for its runtime guards, so it must not import jax, numpy, or anything
+under ``repro`` — shape arguments are duck-typed on attribute names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping
+
+INT32_MIN = -(2 ** 31)
+INT32_MAX = 2 ** 31 - 1
+
+
+class ContractViolation(ValueError):
+    """A decode-pipeline contract does not hold.
+
+    Subclasses ``ValueError`` so pre-existing callers of the runtime
+    guards (which raised plain ``ValueError``) keep working.
+    """
+
+
+def checked_int32(value: int, what: str, hint: str = "") -> int:
+    """Return ``value`` if it fits a signed 32-bit int, else raise.
+
+    ``what`` names the quantity in the error ("write index bound", ...);
+    ``hint`` optionally tells the caller how to get back under the limit
+    ("split the batch below N units").
+    """
+    if not INT32_MIN <= value <= INT32_MAX:
+        msg = (f"{what} = {value} overflows int32 "
+               f"[{INT32_MIN}, {INT32_MAX}]")
+        if hint:
+            msg += f". {hint}"
+        raise ContractViolation(msg)
+    return value
+
+
+# Write-pass headroom: one chunk's speculative decode can overshoot its
+# segment's true coefficient range by at most s_max symbols x 64
+# coefficients, plus a final zero-run of up to 63 positions. The write
+# index `write_base + st.n + o.run` must stay in int32 through that
+# overshoot *before* the `idx < write_max` clamp compares it.
+def write_overshoot(s_max: int) -> int:
+    return 64 * s_max + 63
+
+
+def checked_coeff_capacity(total_units: int, s_max: int = 0) -> int:
+    """The generalized PR 3 guard: dense coefficient indexing fits int32.
+
+    ``total_units * 64`` is the dense coefficient extent
+    (``seg_coeff_base`` entries, the ``units_end`` write clamp, and the
+    write-buffer sentinel all reach it). With ``s_max`` given, the bound
+    also covers the speculative single-chunk overshoot past the final
+    segment end (see :func:`write_overshoot`) — the largest int32 the
+    compiled write pass can actually compute.
+    """
+    units_end = total_units * 64
+    hint = (f"Split the batch below {INT32_MAX // 64} units.")
+    checked_int32(units_end, f"batch of {total_units} data units -> "
+                  f"{units_end} dense coefficients", hint)
+    if s_max:
+        checked_int32(units_end + write_overshoot(s_max),
+                      f"write-index bound units_end + 64*s_max + 63 "
+                      f"({units_end} + {write_overshoot(s_max)})", hint)
+    return total_units
+
+
+def check_shape_capacities(shape) -> None:
+    """Runtime guard over a PlanShape's *capacities* (not actual counts).
+
+    ``build_batch_plan`` checks the actual unit count, but bucketing
+    rounds capacities UP a geometric ladder — a batch whose true count
+    passes the runtime guard can still land in a bucket whose padded
+    capacity products overflow. Called from ``plan_shape`` and
+    ``merge_plan_shapes`` so no compiled program ever exists for an
+    overflowing shape. Duck-typed: ``shape`` needs ``n_units``,
+    ``s_max``, ``n_words``, ``n_chunks``.
+    """
+    hint = "Use a smaller batch or a finer bucket ladder."
+    # dense coefficient extent + speculative write overshoot
+    checked_int32(shape.n_units * 64 + write_overshoot(shape.s_max),
+                  f"bucketed write-index bound n_units*64 + 64*s_max + 63 "
+                  f"({shape.n_units}*64 + {write_overshoot(shape.s_max)})",
+                  hint)
+    # bit positions: p ranges over [0, 32*n_words] and one extra symbol
+    # advance (<= 31 code+magnitude bits) past the limit check
+    checked_int32(shape.n_words * 32 + 63,
+                  f"bit-position bound n_words*32 + 63 ({shape.n_words}*32)",
+                  hint)
+    # lane axis: chunk ids and the chain permutations are int32
+    checked_int32(shape.n_chunks, f"lane capacity n_chunks", hint)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntRange:
+    """A closed integer interval [lo, hi] — the abstract value of the
+    overflow lattice. Interval arithmetic only needs +, *, and constant
+    lifting for the plan index expressions."""
+
+    lo: int
+    hi: int
+
+    def __post_init__(self):
+        if self.lo > self.hi:
+            raise ValueError(f"empty IntRange [{self.lo}, {self.hi}]")
+
+    @staticmethod
+    def const(n: int) -> "IntRange":
+        return IntRange(n, n)
+
+    def __add__(self, other: "IntRange") -> "IntRange":
+        return IntRange(self.lo + other.lo, self.hi + other.hi)
+
+    def __mul__(self, other: "IntRange") -> "IntRange":
+        ps = (self.lo * other.lo, self.lo * other.hi,
+              self.hi * other.lo, self.hi * other.hi)
+        return IntRange(min(ps), max(ps))
+
+    @property
+    def fits_int32(self) -> bool:
+        return INT32_MIN <= self.lo and self.hi <= INT32_MAX
+
+    def check(self, what: str) -> "IntRange":
+        checked_int32(self.lo, f"{what} (lower bound)")
+        checked_int32(self.hi, f"{what} (upper bound)")
+        return self
+
+
+def plan_index_ranges(shape, model: str = "valid") -> Dict[str, IntRange]:
+    """Bound every int32 index expression of the compiled decoder.
+
+    Returns ``{expression name: IntRange}`` as a function of the shape's
+    capacities, under one of two bitstream models:
+
+    ``model="valid"``
+        Well-formed (or validated/masked) bitstreams: every chunk's
+        converged exit count equals the true symbol count, so a write
+        base never exceeds its segment's coefficient range and only the
+        *active* chunk overshoots speculatively (by
+        :func:`write_overshoot`).
+
+    ``model="adversarial"``
+        No convergence assumption: a damaged segment's chunks can each
+        exit with up to ``64 * s_max`` phantom coefficient positions, so
+        the cumulative write base of a segment spanning ``k`` chunks
+        grows as ``k * 64 * s_max``. :func:`max_damaged_segment_chunks`
+        gives the largest ``k`` that stays safe; ``validate_batch``'s
+        segment masking keeps real damaged inputs inside the valid
+        model, so this bound is the residual exposure for *unvalidated*
+        adversarial feeds (documented in docs/ANALYSIS.md).
+    """
+    if model not in ("valid", "adversarial"):
+        raise ValueError(f"unknown lattice model {model!r}")
+    units_end = IntRange(0, shape.n_units * 64)
+    over = IntRange(0, write_overshoot(shape.s_max))
+    if model == "valid":
+        write_base = units_end
+    else:
+        phantom = IntRange(0, shape.n_chunks * 64 * shape.s_max)
+        write_base = units_end + phantom
+    ranges = {
+        "units_end": units_end,
+        "seg_coeff_base": units_end,
+        "write_base": write_base,
+        # idx = write_base + st.n (<= 64*s_max) + o.run (<= 63)
+        "write_index": write_base + over,
+        # bit position: within [0, 32*n_words] plus one symbol advance
+        "bit_position": IntRange(0, shape.n_words * 32 + 63),
+        # word fetch: word_base + (p >> 5) + 1
+        "word_fetch": IntRange(0, shape.n_words + (63 >> 5) + 1),
+        "lane_index": IntRange(0, shape.n_chunks - 1),
+        "sentinel": IntRange(0, shape.n_units * 64),
+    }
+    return ranges
+
+
+def check_index_lattice(shape, model: str = "valid") -> None:
+    """Assert every lattice range of ``shape`` fits int32."""
+    for name, rng in plan_index_ranges(shape, model=model).items():
+        rng.check(f"{model}-model {name} at capacities of {_label(shape)}")
+
+
+def max_damaged_segment_chunks(shape) -> int:
+    """Largest chunk count of one unvalidated damaged segment for which
+    the adversarial write base still cannot wrap int32."""
+    per_chunk = 64 * shape.s_max
+    head = INT32_MAX - shape.n_units * 64 - write_overshoot(shape.s_max)
+    return max(0, head // per_chunk)
+
+
+def _label(shape) -> str:
+    lab = getattr(shape, "label", None)
+    return lab() if callable(lab) else repr(shape)
+
+
+# ---------------------------------------------------------------------------
+# Lane-graph liveness (the PR 3 "gather creep" contract)
+# ---------------------------------------------------------------------------
+
+#: The plan operands that encode the lane permutation / chain adjacency.
+#: On identity plans (``permuted=False``) the lowerings must use the
+#: shift/direct-scan forms instead of gathering through these arrays —
+#: gathers here become all-gathers under SPMD partitioning and kill the
+#: identity fast path.
+LANE_GRAPH_ARRAYS = ("chunk_prev", "chunk_next", "lane_perm", "chunk_order")
+
+#: Per sync schedule: the lane-graph operands an *identity* program may
+#: legitimately consume. ``faithful`` walks the chain through
+#: ``chunk_next`` by construction (its inter-round scatter is the
+#: algorithm, not creep); the other three schedules must not touch the
+#: graph at all when ``permuted=False``.
+IDENTITY_LIVE_OK: Mapping[str, frozenset] = {
+    "jacobi": frozenset(),
+    "faithful": frozenset({"chunk_next"}),
+    "sequential": frozenset(),
+    "specmap": frozenset(),
+}
+
+#: Primitives whose index operand being lane-graph-tainted constitutes a
+#: violation on identity plans (operand 0 is data, operand 1 indices).
+INDEXED_ACCESS_PRIMS = ("gather", "scatter", "scatter-add")
+
+#: Primitive-name fragments that mean "leaves the device mid-trace".
+#: None of these may appear anywhere in a decode program's jaxpr.
+HOST_CALLBACK_PRIMS = ("callback", "infeed", "outfeed", "host_local_array",
+                       "debug_print")
+
+
+#: The jaxpr-level contracts, as data: name -> human description.
+#: ``jaxpr_check`` iterates this to report coverage; docs/ANALYSIS.md
+#: renders it as the contract catalog.
+JAXPR_CONTRACTS: Dict[str, str] = {
+    "identity-lane-graph": (
+        "identity (permuted=False) programs never gather/scatter through "
+        "lane-graph operands outside IDENTITY_LIVE_OK[sync]; permuted "
+        "programs must (flip check)"),
+    "no-f64": "no float64 value anywhere in the traced decode program",
+    "no-host-callback": (
+        "no host callback / infeed / outfeed primitive in the hot path"),
+    "words-donated": (
+        "the words buffer is declared donated (donate_argnums), never "
+        "aliased straight to an output, and the donation survives SPMD "
+        "lowering (mesh StableHLO marks words jax.buffer_donor; "
+        "single-device lowerings legitimately drop it — words matches no "
+        "output shape, so only the partitioned path can consume it)"),
+    "collective-accounting": (
+        "collective instruction counts in compiled SPMD HLO agree with "
+        "dist.collectives byte accounting (same kinds, bytes > 0 wherever "
+        "count > 0)"),
+    "int32-lattice": (
+        "plan index arithmetic cannot overflow int32 at the shape's "
+        "(bucketed) capacities under the valid-bitstream model, and the "
+        "adversarial headroom bound is reported"),
+}
+
+
+def identity_live_ok(sync: str) -> frozenset:
+    try:
+        return IDENTITY_LIVE_OK[sync]
+    except KeyError:
+        raise ContractViolation(
+            f"no lane-graph liveness entry for sync schedule {sync!r}; "
+            f"add it to contracts.IDENTITY_LIVE_OK") from None
+
+
+def iter_contracts() -> Iterable:
+    return JAXPR_CONTRACTS.items()

@@ -1,0 +1,345 @@
+"""AST linter for the decode pipeline's repo-specific bug classes.
+
+Pure stdlib (``ast`` + ``tokenize``): importable and runnable without
+jax, so the CI lint job costs nothing beyond parsing. Rules live in
+``repro.analysis.rules``; each is a module with ``NAME``,
+``DESCRIPTION`` and ``check(module) -> iterable[Finding]``.
+
+Suppression, two levels:
+
+* inline — a ``# repro: allow[rule]`` comment on the finding's line or
+  the line directly above it;
+* baseline — ``analysis/baseline.txt`` entries of the form
+  ``rule :: path :: stripped source line :: justification``. Keys use
+  the *text* of the offending line rather than its number so unrelated
+  edits above a baselined finding don't invalidate the entry.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow\[([a-zA-Z0-9_,\- ]+)\]")
+
+_WS = re.compile(r"\s+")
+
+
+def _norm(line: str) -> str:
+    return _WS.sub(" ", line.strip())
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str            # posix path relative to src/ (e.g. repro/core/api.py)
+    line: int
+    col: int
+    message: str
+    source_line: str
+
+    def baseline_key(self) -> str:
+        return f"{self.rule} :: {self.path} :: {_norm(self.source_line)}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Traced-context detection
+# ---------------------------------------------------------------------------
+
+# Callables whose function argument (or decorated function) runs under
+# trace. Bare names are only trusted when unambiguous; generic names
+# (scan/cond/switch/map) additionally require a jax/lax dotted prefix.
+_TRACING_BARE = {
+    "jit", "pjit", "pmap", "vmap", "shard_map", "fori_loop", "while_loop",
+    "associative_scan", "checkpoint", "remat", "custom_jvp", "custom_vjp",
+}
+_TRACING_LAX_ONLY = {"scan", "cond", "switch", "map"}
+_JAXISH_PREFIXES = ("jax", "lax", "jax.lax", "jax.experimental",
+                    "jax.experimental.shard_map")
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.lax.scan' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_tracing_callable(node: ast.AST) -> bool:
+    dn = dotted_name(node)
+    if dn is None:
+        return False
+    head, _, last = dn.rpartition(".")
+    if last in _TRACING_BARE:
+        return True
+    if last in _TRACING_LAX_ONLY:
+        return any(head == p or head.endswith("." + p) or head.startswith(p)
+                   for p in ("lax", "jax.lax")) or head == "jax"
+    return False
+
+
+def _bound_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside a function scope (params, assigns, imports,
+    for/with/except targets, nested defs) — NOT entering nested scopes."""
+    out: Set[str] = set()
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = fn.args
+        for p in (a.posonlyargs + a.args + a.kwonlyargs
+                  + ([a.vararg] if a.vararg else [])
+                  + ([a.kwarg] if a.kwarg else [])):
+            out.add(p.arg)
+        body = fn.body
+    elif isinstance(fn, ast.Lambda):
+        a = fn.args
+        for p in (a.posonlyargs + a.args + a.kwonlyargs
+                  + ([a.vararg] if a.vararg else [])
+                  + ([a.kwarg] if a.kwarg else [])):
+            out.add(p.arg)
+        return out
+    else:
+        body = getattr(fn, "body", [])
+
+    def visit(node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(node.name)
+            return  # don't descend into nested scope
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, ast.ClassDef):
+            out.add(node.name)
+            return
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            out.add(node.id)
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add((alias.asname or alias.name).split(".")[0])
+        if isinstance(node, ast.ExceptHandler) and node.name:
+            out.add(node.name)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in body:
+        visit(stmt)
+    return out
+
+
+class Module:
+    """One parsed source file plus the derived context rules consume."""
+
+    def __init__(self, source: str, path: str):
+        self.source = source
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.suppressed: Dict[int, Set[str]] = self._suppressions()
+        self.traced_fns: Set[ast.AST] = self._traced_functions()
+        self._bound_cache: Dict[ast.AST, Set[str]] = {}
+
+    # -- suppression comments ------------------------------------------------
+    def _suppressions(self) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = SUPPRESS_RE.search(tok.string)
+                if m:
+                    rules = {r.strip() for r in m.group(1).split(",")}
+                    out.setdefault(tok.start[0], set()).update(rules)
+        except tokenize.TokenError:
+            pass
+        return out
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        for line in (finding.line, finding.line - 1):
+            rules = self.suppressed.get(line)
+            if rules and (finding.rule in rules or "*" in rules):
+                return True
+        return False
+
+    # -- traced-context detection -------------------------------------------
+    def _traced_functions(self) -> Set[ast.AST]:
+        traced: Set[ast.AST] = set()
+        traced_names: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if self._is_tracing_decorator(dec):
+                        traced.add(node)
+            if isinstance(node, ast.Call) and is_tracing_callable(node.func):
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Lambda):
+                        traced.add(arg)
+                    elif isinstance(arg, ast.Name):
+                        traced_names.add(arg.id)
+        for node in ast.walk(self.tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name in traced_names):
+                traced.add(node)
+        return traced
+
+    @staticmethod
+    def _is_tracing_decorator(dec: ast.AST) -> bool:
+        if is_tracing_callable(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if is_tracing_callable(dec.func):
+                return True  # @jax.jit(...)
+            dn = dotted_name(dec.func)
+            if dn and dn.rpartition(".")[2] == "partial" and dec.args:
+                return is_tracing_callable(dec.args[0])
+        return False
+
+    def enclosing_functions(self, node: ast.AST) -> List[ast.AST]:
+        """Innermost-first chain of enclosing function/lambda nodes."""
+        out = []
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                out.append(cur)
+            cur = self.parents.get(cur)
+        return out
+
+    def in_traced(self, node: ast.AST) -> bool:
+        return any(fn in self.traced_fns
+                   for fn in [node] + self.enclosing_functions(node))
+
+    def is_traced_fn(self, fn: ast.AST) -> bool:
+        return fn in self.traced_fns or any(
+            f in self.traced_fns for f in self.enclosing_functions(fn))
+
+    def bound_names(self, fn: ast.AST) -> Set[str]:
+        if fn not in self._bound_cache:
+            self._bound_cache[fn] = _bound_names(fn)
+        return self._bound_cache[fn]
+
+    def module_names(self) -> Set[str]:
+        return self.bound_names(self.tree)
+
+    # -- finding construction ------------------------------------------------
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        src = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        return Finding(rule=rule, path=self.path, line=line, col=col,
+                       message=message, source_line=src)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+def _rules():
+    from . import rules
+    return rules.ALL
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules=None) -> List[Finding]:
+    """Lint one source string; returns findings after inline suppression
+    (baseline filtering is the CLI's job). The unit-test entry point."""
+    mod = Module(source, path)
+    out: List[Finding] = []
+    for rule in (rules if rules is not None else _rules()):
+        for f in rule.check(mod):
+            if not mod.is_suppressed(f):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def lint_paths(paths: Sequence[Path], root: Optional[Path] = None,
+               rules=None) -> List[Finding]:
+    """Lint ``*.py`` files under ``paths``; finding paths are relative to
+    ``root`` (default: common parent ``src/`` if present, else cwd)."""
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    out: List[Finding] = []
+    for f in files:
+        rel = _relpath(f, root)
+        try:
+            src = f.read_text()
+        except (OSError, UnicodeDecodeError):
+            continue
+        try:
+            out.extend(lint_source(src, rel, rules=rules))
+        except SyntaxError as e:
+            out.append(Finding(rule="parse-error", path=rel,
+                               line=e.lineno or 1, col=e.offset or 0,
+                               message=f"could not parse: {e.msg}",
+                               source_line=""))
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def _relpath(f: Path, root: Optional[Path]) -> str:
+    f = f.resolve()
+    if root is not None:
+        try:
+            return f.relative_to(Path(root).resolve()).as_posix()
+        except ValueError:
+            pass
+    # default: anchor at the nearest ancestor named src/ for stable keys
+    for anc in f.parents:
+        if anc.name == "src":
+            return f.relative_to(anc).as_posix()
+    return f.name
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path) -> Dict[str, str]:
+    """{baseline key: justification} from ``baseline.txt``."""
+    out: Dict[str, str] = {}
+    if not Path(path).exists():
+        return out
+    for raw in Path(path).read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = [p.strip() for p in line.split(" :: ")]
+        if len(parts) < 3:
+            continue
+        key = " :: ".join(parts[:3])
+        out[key] = parts[3] if len(parts) > 3 else ""
+    return out
+
+
+def apply_baseline(findings: Iterable[Finding],
+                   baseline: Dict[str, str]
+                   ) -> Tuple[List[Finding], List[str]]:
+    """(new findings, stale baseline keys)."""
+    findings = list(findings)
+    used: Set[str] = set()
+    new: List[Finding] = []
+    for f in findings:
+        k = f.baseline_key()
+        if k in baseline:
+            used.add(k)
+        else:
+            new.append(f)
+    stale = [k for k in baseline if k not in used]
+    return new, stale

@@ -1,0 +1,9 @@
+"""Lint rule registry. A rule is a module with ``NAME``, ``DESCRIPTION``
+and ``check(module) -> iterable[Finding]``; add new rules here."""
+from __future__ import annotations
+
+from . import divergence, errors, f64, host_sync, static_fields
+
+ALL = (host_sync, static_fields, divergence, errors, f64)
+
+__all__ = ["ALL", "host_sync", "static_fields", "divergence", "errors", "f64"]

@@ -1,0 +1,98 @@
+"""host-divergence: per-host control flow around collective rendezvous.
+
+The PR 6 deadlock class: every process must reach each consensus /
+coordination call (``exchange``, ``barrier``, ``jax.distributed
+.initialize``, coordination-service KV ops) the same number of times in
+the same order. Branching on *per-host identity* (``process_id`` /
+``process_index`` / ``is_main``) before or around such a call lets one
+host skip (or exit via raise/return ahead of) a rendezvous its peers
+are blocked in — the corrupt-feed deadlock ``decode_multihost
+(validate=True)`` was built to prevent. Branching on *uniform* values
+(``num_processes``, ``process_count``) is safe and not flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import dotted_name
+
+NAME = "host-divergence"
+DESCRIPTION = ("process-identity-dependent branching around collective "
+               "rendezvous calls (exchange/barrier/KV ops)")
+
+_IDENTITY_NAMES = {"process_id", "process_index", "is_main", "rank",
+                   "host_id", "is_coordinator"}
+_CONSENSUS_CALLS = {
+    "exchange", "barrier", "plan_consensus", "initialize",
+    "blocking_key_value_get", "key_value_set", "wait_at_barrier",
+    "gather_decode_stats",
+}
+
+
+def _references_identity(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _IDENTITY_NAMES:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in _IDENTITY_NAMES:
+            return True
+        if isinstance(sub, ast.Call):
+            dn = dotted_name(sub.func)
+            if dn and dn.rpartition(".")[2] in _IDENTITY_NAMES:
+                return True
+    return False
+
+
+def _is_consensus_call(node: ast.Call) -> bool:
+    dn = dotted_name(node.func)
+    return bool(dn) and dn.rpartition(".")[2] in _CONSENSUS_CALLS
+
+
+def check(mod):
+    consensus_calls = [n for n in ast.walk(mod.tree)
+                       if isinstance(n, ast.Call) and _is_consensus_call(n)]
+
+    # (a) a rendezvous call lexically inside an identity-tested branch
+    for call in consensus_calls:
+        cur = mod.parents.get(call)
+        while cur is not None:
+            if (isinstance(cur, (ast.If, ast.While))
+                    and _references_identity(cur.test)):
+                dn = dotted_name(call.func)
+                yield mod.finding(
+                    NAME, call,
+                    f"collective rendezvous {dn}(...) runs under a branch "
+                    f"testing per-host identity — hosts that skip it "
+                    f"deadlock the peers inside it (PR 6 class); restructure "
+                    f"so every process reaches the call, or gate on uniform "
+                    f"values (num_processes) only")
+                break
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+            cur = mod.parents.get(cur)
+
+    # (b) an identity-tested branch that raises/returns before a later
+    # rendezvous in the same function
+    fn_calls = {}
+    for call in consensus_calls:
+        fns = mod.enclosing_functions(call)
+        if fns:
+            fn_calls.setdefault(fns[0], []).append(call.lineno)
+    for fn, call_lines in fn_calls.items():
+        last_call = max(call_lines)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.If):
+                continue
+            if not _references_identity(node.test):
+                continue
+            for sub in ast.walk(node):
+                if (isinstance(sub, (ast.Raise, ast.Return))
+                        and sub.lineno < last_call):
+                    yield mod.finding(
+                        NAME, sub,
+                        f"early {type(sub).__name__.lower()} under a "
+                        f"per-host-identity branch precedes a collective "
+                        f"rendezvous at line {last_call} — one host bails "
+                        f"while peers block in the rendezvous (PR 6 class)")
+                    break
+            else:
+                continue

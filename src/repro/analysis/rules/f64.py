@@ -1,0 +1,66 @@
+"""f64-literal-promotion: float64 creeping into device code.
+
+The decode pipeline is f32/bf16/int32 on device by contract (the no-f64
+jaxpr contract enforces the traced programs; this rule catches the
+sources). With ``jax_enable_x64`` off an f64 request silently becomes
+f32 — masking the bug until someone flips the flag; with it on, every
+downstream op doubles its bytes and the Pallas kernels' tiling
+assumptions break. Host-side ``np.float64`` precompute (IDCT matrix
+folding, encoder reference) is intentional and NOT flagged — only jnp/
+jax namespaces, and numpy conversions inside traced functions.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import dotted_name
+
+NAME = "f64-literal-promotion"
+DESCRIPTION = ("float64 dtype requests in jnp/jax calls, or .astype(f64) "
+               "inside traced functions")
+
+_F64_DOTTED = {"jnp.float64", "jax.numpy.float64", "np.float64",
+               "numpy.float64", "np.double", "numpy.double"}
+_JNP_PREFIXES = ("jnp.", "jax.numpy.", "jax.")
+
+
+def _is_f64_value(node: ast.AST) -> bool:
+    dn = dotted_name(node)
+    if dn in _F64_DOTTED:
+        return True
+    if isinstance(node, ast.Constant) and node.value in ("float64", "double"):
+        return True
+    return False
+
+
+def check(mod):
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = dotted_name(node.func) or ""
+        # dtype=float64 keyword on jnp/jax calls anywhere; on numpy calls
+        # only inside traced functions (host f64 precompute is fine)
+        for kw in node.keywords:
+            if kw.arg != "dtype" or not _is_f64_value(kw.value):
+                continue
+            jnp_call = any(dn.startswith(p) for p in _JNP_PREFIXES)
+            if jnp_call or mod.in_traced(node):
+                yield mod.finding(
+                    NAME, node,
+                    f"dtype=float64 in {dn or 'a'}(...) — the decode "
+                    f"pipeline is f32/int32 on device; this either "
+                    f"silently degrades to f32 (x64 off) or doubles "
+                    f"device bytes (x64 on)")
+        # jnp.float64(x) constructor
+        if dn in {"jnp.float64", "jax.numpy.float64"}:
+            yield mod.finding(
+                NAME, node,
+                "jnp.float64(...) constructs an f64 on device")
+        # .astype(f64) on traced values
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args
+                and _is_f64_value(node.args[0]) and mod.in_traced(node)):
+            yield mod.finding(
+                NAME, node,
+                ".astype(float64) inside a traced function promotes a "
+                "traced value to f64")

@@ -1,0 +1,71 @@
+"""traced-host-sync: host synchronization inside traced code.
+
+``.item()`` / ``int()`` / ``float()`` / ``np.asarray`` /
+``block_until_ready`` on a traced value inside a jit / shard_map /
+control-flow body either fails at trace time or (worse, via a leaked
+concrete value) silently forces a device->host round trip per step —
+which serializes the parse/decode overlap the serving front-end depends
+on. Casting trace-time *constants* is fine; suppress those sites with
+``# repro: allow[traced-host-sync]``.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import dotted_name
+
+NAME = "traced-host-sync"
+DESCRIPTION = ("host sync (.item()/int()/float()/np.asarray/"
+               "block_until_ready/device_get) inside a traced function")
+
+_SYNC_ATTRS = {"item", "block_until_ready", "tolist", "to_py"}
+_CAST_NAMES = {"int", "float"}
+_SYNC_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get", "device_get", "jax.block_until_ready",
+}
+
+
+def _is_constant_ish(node: ast.AST) -> bool:
+    """Casts of obvious trace-time constants are not host syncs."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Call):
+        dn = dotted_name(node.func)
+        if dn and dn.rpartition(".")[2] in {"len", "round", "ceil", "floor"}:
+            return True
+    if isinstance(node, (ast.BinOp, ast.UnaryOp)):
+        kids = ([node.left, node.right] if isinstance(node, ast.BinOp)
+                else [node.operand])
+        return all(_is_constant_ish(k) for k in kids)
+    return False
+
+
+def check(mod):
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not mod.in_traced(node):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr in _SYNC_ATTRS:
+            yield mod.finding(
+                NAME, node,
+                f".{func.attr}() forces a device->host sync inside a "
+                f"traced function (breaks streaming overlap; fails on "
+                f"traced values)")
+            continue
+        dn = dotted_name(func)
+        if dn in _SYNC_CALLS:
+            yield mod.finding(
+                NAME, node,
+                f"{dn}(...) materializes a traced value on host inside a "
+                f"traced function")
+            continue
+        if (isinstance(func, ast.Name) and func.id in _CAST_NAMES
+                and len(node.args) == 1 and not node.keywords
+                and not _is_constant_ish(node.args[0])):
+            yield mod.finding(
+                NAME, node,
+                f"{func.id}(...) on a possibly-traced value inside a "
+                f"traced function concretizes it (ConcretizationTypeError "
+                f"at best, silent host sync at worst); if the operand is a "
+                f"trace-time constant, add `# repro: allow[{NAME}]`")

@@ -1,0 +1,154 @@
+"""unhashable-static: compile-cache keys that don't hash, and jit
+closures that bypass the cache key entirely.
+
+Two sub-checks for the PR 4 recompile-storm bug class:
+
+1. A mutable / ndarray field on a frozen dataclass (``PlanShape`` keys
+   the program cache by hash) either raises at hash time or — for
+   ndarrays — hashes by identity, so equal shapes stop deduplicating
+   and every batch recompiles.
+
+2. A jit-wrapped function nested inside another function closes over
+   enclosing-scope Python values. Those captures are baked into the
+   trace but are invisible to the jit cache key: rebuilding the closure
+   with different captured values silently recompiles (storm) or —
+   if the capture mutates — silently reuses a stale constant. Sites
+   that rebuild the closure exactly once per cached program (the
+   DecodeProgram pattern) are legitimate: baseline them with a
+   justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..lint import Module, dotted_name
+
+NAME = "unhashable-static"
+DESCRIPTION = ("mutable/ndarray fields on frozen (hashable) dataclasses; "
+               "enclosing-scope captures inside nested jit functions")
+
+_MUTABLE_HEADS = {"ndarray", "list", "List", "dict", "Dict", "set", "Set",
+                  "bytearray", "Array", "ArrayLike", "DeviceArray",
+                  "MutableMapping", "defaultdict", "OrderedDict"}
+_WRAPPER_HEADS = {"Optional", "Union", "Tuple", "FrozenSet", "Final",
+                  "ClassVar", "Annotated", "Sequence", "Mapping", "tuple",
+                  "frozenset"}
+
+
+def _frozen_dataclass(cls: ast.ClassDef) -> bool:
+    """Frozen dataclasses that hash by field values (``eq=False`` opts a
+    class out: it falls back to identity hash, which ndarrays survive)."""
+    for dec in cls.decorator_list:
+        dn = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if not dn or dn.rpartition(".")[2] != "dataclass":
+            continue
+        if isinstance(dec, ast.Call):
+            kwargs = {kw.arg: kw.value for kw in dec.keywords}
+            frozen = kwargs.get("frozen")
+            eq = kwargs.get("eq")
+            if (isinstance(frozen, ast.Constant) and frozen.value is True
+                    and not (isinstance(eq, ast.Constant)
+                             and eq.value is False)):
+                return True
+    return False
+
+
+def _mutable_annotation(ann: ast.AST) -> bool:
+    if isinstance(ann, ast.Subscript):
+        head = dotted_name(ann.value)
+        last = head.rpartition(".")[2] if head else ""
+        if last in _MUTABLE_HEADS:
+            return True
+        if last in _WRAPPER_HEADS:
+            sl = ann.slice
+            elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            return any(_mutable_annotation(e) for e in elts)
+        return False
+    dn = dotted_name(ann)
+    if dn is None:
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            return any(h in ann.value for h in ("ndarray", "List[", "Dict[",
+                                                "list", "dict"))
+        return False
+    return dn.rpartition(".")[2] in _MUTABLE_HEADS
+
+
+def _jit_functions(mod: Module):
+    """FunctionDefs that are jit-decorated or wrapped via jax.jit(name)."""
+    jit_names = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            dn = dotted_name(node.func)
+            if dn and dn.rpartition(".")[2] in {"jit", "pjit"}:
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name):
+                        jit_names.add(arg.id)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        decorated = any(_is_jit_decorator(d) for d in node.decorator_list)
+        if decorated or node.name in jit_names:
+            yield node
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    dn = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+    if dn and dn.rpartition(".")[2] in {"jit", "pjit"}:
+        return True
+    if isinstance(dec, ast.Call) and dec.args:
+        head = dotted_name(dec.func)
+        if head and head.rpartition(".")[2] == "partial":
+            inner = dotted_name(dec.args[0])
+            return bool(inner) and inner.rpartition(".")[2] in {"jit", "pjit"}
+    return False
+
+
+def _free_loads(fn: ast.AST, mod: Module):
+    bound = mod.bound_names(fn)
+    seen = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id not in bound and node.id not in seen):
+            seen.add(node.id)
+            yield node.id
+
+
+def check(mod: Module):
+    # 1) frozen dataclass fields
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and _frozen_dataclass(node):
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and _mutable_annotation(stmt.annotation)):
+                    tgt = (stmt.target.id
+                           if isinstance(stmt.target, ast.Name) else "?")
+                    yield mod.finding(
+                        NAME, stmt,
+                        f"frozen dataclass {node.name}.{tgt} has a mutable/"
+                        f"ndarray-typed field — frozen dataclasses key "
+                        f"compile caches by hash; this field breaks (or "
+                        f"identity-hashes) that key and recompiles per "
+                        f"instance")
+
+    # 2) enclosing-scope captures in nested jit functions
+    import builtins
+    builtin_names = set(dir(builtins))
+    module_names = mod.module_names()
+    for fn in _jit_functions(mod):
+        enclosing = [f for f in mod.enclosing_functions(fn)
+                     if not isinstance(f, ast.Lambda)]
+        if not enclosing:
+            continue  # module-level jit: captures are module globals
+        captured = sorted(
+            name for name in _free_loads(fn, mod)
+            if name not in builtin_names and name not in module_names
+            and any(name in mod.bound_names(g) for g in enclosing))
+        if captured:
+            yield mod.finding(
+                NAME, fn,
+                f"jit function {fn.name!r} closes over enclosing-scope "
+                f"value(s) {', '.join(captured)} — captures are baked into "
+                f"the trace but invisible to the jit cache key (PR 4 "
+                f"recompile-storm class); pass them as static args or "
+                f"baseline with a justification if the closure is built "
+                f"once per cached program")

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis import contracts
 from ..jpeg import tables as T
 from ..jpeg.codec_ref import dct_matrix, scan_unit_layout
 from ..jpeg.format import (JpegFormatError, JpegImage, parse_jpeg,
@@ -502,7 +503,7 @@ def plan_shape(plan: BatchPlan, bucket: bool = True,
     if plan.balance == "none":
         assert plan.n_lanes == 1, "identity plans are single-block"
     block_cap = cap(plan.n_chunks // plan.n_lanes)
-    return PlanShape(
+    shape = PlanShape(
         chunk_bits=plan.chunk_bits,
         seq_chunks=plan.seq_chunks,
         s_max=plan.s_max,
@@ -521,6 +522,11 @@ def plan_shape(plan: BatchPlan, bucket: bool = True,
         uniform=plan.uniform,
         geometry=plan.geometry,
     )
+    # build_batch_plan guards the *actual* counts; capacities are rounded
+    # UP the bucket ladder, so the padded extents need their own check —
+    # no compiled program may exist for an overflowing shape
+    contracts.check_shape_capacities(shape)
+    return shape
 
 
 @dataclasses.dataclass
@@ -723,7 +729,7 @@ def merge_plan_shapes(shapes: Sequence[PlanShape]) -> PlanShape:
     def cap(k: str) -> int:
         return max(getattr(s, k) for s in shapes)
 
-    return PlanShape(
+    merged = PlanShape(
         chunk_bits=first.chunk_bits,
         seq_chunks=first.seq_chunks,
         s_max=cap("s_max"),
@@ -742,6 +748,10 @@ def merge_plan_shapes(shapes: Sequence[PlanShape]) -> PlanShape:
         uniform=uniform,
         geometry=first.geometry if uniform else None,
     )
+    # an elementwise max of per-host capacities (s_max up, n_units up) can
+    # overflow where every constituent shape was fine — check the merge
+    contracts.check_shape_capacities(merged)
+    return merged
 
 
 def consensus_plan(plan: BatchPlan, shape: PlanShape) -> BatchPlan:
@@ -859,21 +869,18 @@ def empty_batch_plan(chunk_bits: int = 1024,
 # Plan builder
 # ---------------------------------------------------------------------------
 
-def check_coeff_capacity(total_units: int) -> None:
+def check_coeff_capacity(total_units: int, s_max: int = 0) -> None:
     """Reject batches whose dense coefficient index overflows int32.
 
     ``BatchPlan.device_arrays`` ships ``seg_coeff_base`` (and the write pass
     computes ``base + local`` offsets) as int32; a batch with
     ``total_units * 64 >= 2**31`` would silently wrap and corrupt write
-    offsets. Fail loudly at plan time instead.
+    offsets. Fail loudly at plan time instead. With ``s_max`` the check
+    also covers the speculative single-chunk write overshoot
+    (``units_end + 64*s_max + 63`` — see ``analysis/contracts.py``, which
+    is also the static lattice the jaxpr contract checker evaluates).
     """
-    if total_units * 64 >= 2 ** 31:
-        raise ValueError(
-            f"batch has {total_units} data units -> {total_units * 64} dense "
-            f"coefficients, which overflows the int32 device offsets "
-            f"(seg_coeff_base / write pass). Split the batch below "
-            f"{2 ** 31 // 64} units."
-        )
+    contracts.checked_coeff_capacity(total_units, s_max=s_max)
 
 
 def chain_adjacency(chunk_first: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -1126,7 +1133,7 @@ def build_batch_plan(
     s_max = chunk_bits // min_code + 2
 
     total_units = int(seg_units.sum())
-    check_coeff_capacity(total_units)
+    check_coeff_capacity(total_units, s_max=int(s_max))
 
     # ---- pixel-stage layout (uniform batches) ---------------------------------
     comp_unit_idx = comp_block_idx = comp_grid = None

@@ -92,6 +92,26 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return dict(per)
 
 
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Instruction count per collective kind (async start/done pairs count
+    once). The contract checker cross-checks this against
+    :func:`collective_bytes`: every kind that appears must also carry
+    accounted traffic, else the roofline's interconnect term is lying."""
+    per: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op.endswith("-done"):
+            continue
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op in KINDS:
+            per[op] += 1
+    return dict(per)
+
+
 def summarize(hlo_text: str) -> Tuple[int, Dict[str, int]]:
     """(total collective bytes, {kind: bytes}) — zero-traffic kinds omitted."""
     per = {k: v for k, v in collective_bytes(hlo_text).items() if v}

@@ -104,7 +104,7 @@ def _active_mesh():
         from jax._src import mesh as mesh_lib
         m = mesh_lib.thread_resources.env.physical_mesh
         return None if m.empty else m
-    except Exception:  # pragma: no cover - jax internals moved
+    except (ImportError, AttributeError):  # pragma: no cover - internals moved
         if not _mesh_probe_warned:
             _mesh_probe_warned = True
             import warnings

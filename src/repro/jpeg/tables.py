@@ -175,9 +175,15 @@ STD_AC_CHROMA_VALS = np.array(
 )
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class HuffmanSpec:
-    """(bits, vals) Huffman table specification as stored in a DHT segment."""
+    """(bits, vals) Huffman table specification as stored in a DHT segment.
+
+    ``eq=False``: the ndarray fields make the generated ``__eq__`` /
+    ``__hash__`` raise (or compare elementwise), so instances compare and
+    hash by identity — content identity goes through :meth:`digest`,
+    which is what the LUT cache keys on.
+    """
 
     bits: np.ndarray  # (16,) int32, bits[i] = #codes of length i+1
     vals: np.ndarray  # (sum(bits),) int32 symbols

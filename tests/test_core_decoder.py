@@ -243,8 +243,9 @@ class TestCoeffCapacityGuard:
 
         seen = {}
 
-        def spy(total_units):
+        def spy(total_units, s_max=0):
             seen["units"] = total_units
+            seen["s_max"] = s_max
             return None
 
         monkeypatch.setattr(B, "check_coeff_capacity", spy)
@@ -252,6 +253,8 @@ class TestCoeffCapacityGuard:
         plan = B.build_batch_plan([r.jpeg_bytes for r in results],
                                   chunk_bits=128)
         assert seen["units"] == plan.total_units
+        # the guard sees the worst-case single-chunk overshoot too
+        assert seen["s_max"] == plan.s_max > 0
 
     def test_small_batches_unaffected(self):
         results = encode_batch(n=1, h=16, w=16)
