@@ -9,10 +9,75 @@ Prints ``name,us_per_call,derived`` CSV rows.
 With ``BENCH_JSON=path.json`` the same rows (plus the run configuration)
 are also written as a JSON artifact — CI uploads one per run so perf is
 diffable across commits.
+
+With ``BENCH_TRAJECTORY`` set, one schema-versioned summary line per run
+is *appended* to a JSONL trajectory file (the env value names the path;
+empty/``1`` means ``benchmarks/trajectory.jsonl``). Each line carries the
+git sha, backend, scale, and the headline health metrics (warm streaming
+step, compiles per 100 batches, lane imbalance) so perf over the commit
+history is a one-file plot, not an artifact archaeology dig.
 """
 import json
 import os
+import subprocess
 import sys
+
+#: Bump when the trajectory line layout changes; readers filter on it.
+TRAJECTORY_SCHEMA = 1
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _derived_fields(row) -> dict:
+    out = {}
+    for part in (row.get("derived") or "").split(";"):
+        k, _, v = part.partition("=")
+        if _ and k:
+            out[k.strip()] = v.strip()
+    return out
+
+
+def trajectory_metrics(rows) -> dict:
+    """Headline health metrics from whichever suites ran."""
+    m = {}
+    for r in rows:
+        d = _derived_fields(r)
+        if r["name"] == "stream/bucketed":
+            m["warm_step_ms"] = round(r["us_per_call"] / 1e3, 3)
+            if "compiles_per_100" in d:
+                m["compiles_per_100"] = float(d["compiles_per_100"])
+        elif r["name"].startswith("skew/") and "imbalance" in d:
+            m[f"imbalance_{r['name'].split('/', 1)[1]}"] = \
+                float(d["imbalance"])
+    return m
+
+
+def append_trajectory(path: str, rows, suites) -> None:
+    from .common import BENCH_BACKEND, BENCH_SCALE
+    entry = {
+        "schema": TRAJECTORY_SCHEMA,
+        "git_sha": _git_sha(),
+        "backend": BENCH_BACKEND,
+        "scale": BENCH_SCALE,
+        "suites": list(suites),
+        "n_rows": len(rows),
+        "metrics": trajectory_metrics(rows),
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"# appended trajectory line to {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -50,6 +115,13 @@ def main() -> None:
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {json_path} ({len(all_rows)} rows)", file=sys.stderr)
+
+    traj = os.environ.get("BENCH_TRAJECTORY")
+    if traj is not None:
+        if traj in ("", "1", "true"):
+            traj = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "trajectory.jsonl")
+        append_trajectory(traj, all_rows, wanted)
 
 
 if __name__ == "__main__":

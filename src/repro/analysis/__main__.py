@@ -62,6 +62,17 @@ def _cmd_contracts(args) -> int:
     return jaxpr_check.run(self_test=args.self_test, verbose=args.verbose)
 
 
+def _cmd_kernels(args) -> int:
+    # The kernel verifier traces Pallas calls on CPU in interpret mode;
+    # like `contracts`, platform env must be pinned before jax initializes.
+    if "jax" in sys.modules:
+        print("warning: jax already imported; kernel cells may trace "
+              "against an unexpected backend", file=sys.stderr)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from . import kernel_check
+    return kernel_check.run(self_test=args.self_test, verbose=args.verbose)
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -84,6 +95,17 @@ def main(argv=None) -> int:
                          "lowering)")
     pc.add_argument("--verbose", action="store_true")
     pc.set_defaults(fn=_cmd_contracts)
+
+    pk = sub.add_parser(
+        "kernels",
+        help="kernel memory-safety verifier: bounds, tiling and "
+             "scatter-race over the Pallas decode path")
+    pk.add_argument("--self-test", action="store_true",
+                    help="also prove the verifier catches three seeded "
+                         "violations (off-by-one pl.ds, duplicate "
+                         "scatter index, non-covering BlockSpec)")
+    pk.add_argument("--verbose", action="store_true")
+    pk.set_defaults(fn=_cmd_kernels)
 
     args = p.parse_args(argv)
     return args.fn(args)

@@ -119,8 +119,10 @@ def check_shape_capacities(shape) -> None:
 @dataclasses.dataclass(frozen=True)
 class IntRange:
     """A closed integer interval [lo, hi] — the abstract value of the
-    overflow lattice. Interval arithmetic only needs +, *, and constant
-    lifting for the plan index expressions."""
+    overflow lattice. Plan index expressions only need +, *, and constant
+    lifting; the kernel verifier (analysis/kernel_check.py) additionally
+    uses the sub/mod/clamp/shift/mask transfer functions and the
+    join/meet lattice operations to abstract-interpret kernel jaxprs."""
 
     lo: int
     hi: int
@@ -133,13 +135,85 @@ class IntRange:
     def const(n: int) -> "IntRange":
         return IntRange(n, n)
 
+    @property
+    def is_const(self) -> bool:
+        return self.lo == self.hi
+
     def __add__(self, other: "IntRange") -> "IntRange":
         return IntRange(self.lo + other.lo, self.hi + other.hi)
+
+    def __sub__(self, other: "IntRange") -> "IntRange":
+        return IntRange(self.lo - other.hi, self.hi - other.lo)
 
     def __mul__(self, other: "IntRange") -> "IntRange":
         ps = (self.lo * other.lo, self.lo * other.hi,
               self.hi * other.lo, self.hi * other.hi)
         return IntRange(min(ps), max(ps))
+
+    def join(self, other: "IntRange") -> "IntRange":
+        """Least upper bound (interval hull)."""
+        return IntRange(min(self.lo, other.lo), max(self.hi, other.hi))
+
+    def meet(self, other: "IntRange") -> "IntRange":
+        """Intersection; raises ValueError when the intervals are disjoint
+        (an unreachable abstract state — callers decide what that means)."""
+        return IntRange(max(self.lo, other.lo), min(self.hi, other.hi))
+
+    def contains(self, other: "IntRange") -> bool:
+        return self.lo <= other.lo and other.hi <= self.hi
+
+    def mod(self, other: "IntRange") -> "IntRange":
+        """Transfer function for C-style truncated remainder (lax.rem):
+        the result has the dividend's sign and |r| < |divisor|."""
+        m = max(abs(other.lo), abs(other.hi))
+        if m == 0:
+            raise ValueError("IntRange.mod by an interval containing only 0")
+        if self.is_const and other.is_const and other.lo != 0:
+            r = abs(self.lo) % abs(other.lo)
+            r = -r if self.lo < 0 else r
+            return IntRange.const(r)
+        lo = 0 if self.lo >= 0 else -(m - 1)
+        hi = 0 if self.hi <= 0 else (m - 1)
+        # the remainder also never exceeds the dividend itself
+        return IntRange(max(lo, self.lo) if self.lo < 0 else lo,
+                        min(hi, self.hi) if self.hi > 0 else hi)
+
+    def clamp_min(self, other: "IntRange") -> "IntRange":
+        """Transfer for max(self, other) — the 'clamp from below' of
+        jnp.maximum / the lower half of jnp.clip."""
+        return IntRange(max(self.lo, other.lo), max(self.hi, other.hi))
+
+    def clamp_max(self, other: "IntRange") -> "IntRange":
+        """Transfer for min(self, other) — the 'clamp from above' of
+        jnp.minimum / the index clamps in the lane-window pre-gather."""
+        return IntRange(min(self.lo, other.lo), min(self.hi, other.hi))
+
+    def clamp(self, lo: int, hi: int) -> "IntRange":
+        """min(max(self, lo), hi) — full jnp.clip transfer."""
+        return self.clamp_min(IntRange.const(lo)).clamp_max(IntRange.const(hi))
+
+    def shift_right(self, bits: "IntRange") -> "IntRange":
+        """Arithmetic >> with a non-negative shift interval (monotone)."""
+        if bits.lo < 0:
+            raise ValueError(f"negative shift interval {bits}")
+        return IntRange(min(self.lo >> bits.lo, self.lo >> bits.hi),
+                        max(self.hi >> bits.lo, self.hi >> bits.hi))
+
+    def bit_and_mask(self, mask: int) -> "IntRange":
+        """Transfer for ``x & mask`` with a constant mask >= 0: the result
+        lands in [0, mask] regardless of x's sign (two's complement)."""
+        if mask < 0:
+            raise ValueError(f"negative mask {mask}")
+        if self.lo >= 0:
+            return IntRange(0, min(self.hi, mask))
+        return IntRange(0, mask)
+
+    def scale(self, k: int) -> "IntRange":
+        """Multiply by a non-negative constant — the BlockSpec tile-origin
+        map ``index_map(i) * tile`` evaluated over a grid interval."""
+        if k < 0:
+            raise ValueError(f"negative tile scale {k}")
+        return IntRange(self.lo * k, self.hi * k)
 
     @property
     def fits_int32(self) -> bool:
@@ -149,6 +223,52 @@ class IntRange:
         checked_int32(self.lo, f"{what} (lower bound)")
         checked_int32(self.hi, f"{what} (upper bound)")
         return self
+
+
+def tile_origin_range(block_index: IntRange, tile: int) -> IntRange:
+    """BlockSpec tile origins over a grid interval.
+
+    A Pallas ``BlockSpec(block_shape, index_map)`` materializes, for grid
+    step ``i``, the element range ``[index_map(i) * tile,
+    index_map(i) * tile + tile)`` along each dimension. Given the interval
+    of ``index_map(i)`` over the whole grid (``i`` in ``[0, grid-1]``),
+    this returns the interval of tile *origins*; the last touched element
+    is ``origin.hi + tile - 1``.
+    """
+    return block_index.scale(tile)
+
+
+def check_block_cover(dim: int, tile: int, block_index: IntRange,
+                      what: str) -> None:
+    """The tiling contract for one (operand dimension, BlockSpec) pair.
+
+    Three sub-claims, each a silent-corruption class on its own:
+
+    * **in-bounds** — the highest tile ends at or before the dimension end
+      (a tile past the end reads/writes Pallas' padding, not the operand);
+    * **cover** — every element is reached by some tile (a grid that stops
+      short silently truncates the remainder: output rows stay zero);
+    * **divisibility** — ``dim % tile == 0``; with blocked indexing a
+      non-dividing tile can only pad or truncate, never fit.
+    """
+    origins = tile_origin_range(block_index, tile)
+    if origins.lo != 0:
+        raise ContractViolation(
+            f"{what}: lowest tile origin {origins.lo} != 0 "
+            f"(block index {block_index.lo}..{block_index.hi} x tile {tile})")
+    if origins.hi + tile > dim:
+        raise ContractViolation(
+            f"{what}: highest tile [{origins.hi}, {origins.hi + tile}) "
+            f"overruns dimension {dim} "
+            f"(block index {block_index.lo}..{block_index.hi} x tile {tile})")
+    if origins.hi + tile < dim:
+        raise ContractViolation(
+            f"{what}: tiles cover only [0, {origins.hi + tile}) of "
+            f"dimension {dim} — silent remainder truncation "
+            f"(block index {block_index.lo}..{block_index.hi} x tile {tile})")
+    if dim % tile:
+        raise ContractViolation(
+            f"{what}: tile {tile} does not divide dimension {dim}")
 
 
 def plan_index_ranges(shape, model: str = "valid") -> Dict[str, IntRange]:
@@ -276,6 +396,170 @@ JAXPR_CONTRACTS: Dict[str, str] = {
         "plan index arithmetic cannot overflow int32 at the shape's "
         "(bucketed) capacities under the valid-bitstream model, and the "
         "adversarial headroom bound is reported"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Kernel memory-safety contracts (analysis/kernel_check.py)
+# ---------------------------------------------------------------------------
+
+#: JPEG Huffman codewords are at most 16 bits (ITU T.81 B.1.1.5); the
+#: 5-bit `clen` LUT field can encode up to 31, so this documented bound
+#: is strictly tighter than the field width — it is what proves the
+#: per-symbol bit advance (clen + size <= 31) stays inside the lane's
+#: `chunk_words + 2` word window. kernel_check cross-checks the packing
+#: offsets below against repro.jpeg.tables at verification time.
+MAX_CODE_BITS = 16
+MAX_MAG_BITS = 15
+#: Largest bit advance of one decoded symbol: codeword + magnitude bits.
+MAX_SYMBOL_ADVANCE = MAX_CODE_BITS + MAX_MAG_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldRange:
+    """Documented interval of a bit-packed table-entry field: after
+    ``(entry >> shift) & mask`` the value lies in [lo, hi]. ``shift`` and
+    ``mask`` identify the field in the kernel's arithmetic; [lo, hi] is
+    the *semantic* bound the table builder guarantees (possibly tighter
+    than the field width, e.g. clen <= 16 in a 5-bit field)."""
+
+    shift: int
+    mask: int
+    lo: int
+    hi: int
+    why: str = ""
+
+
+#: The decode-LUT entry layout (repro.jpeg.tables.pack_lut_entry).
+LUT_FIELD_RANGES = (
+    FieldRange(0, 0x1F, 0, MAX_CODE_BITS,
+               "codeword length; 0 marks an invalid window"),
+    FieldRange(5, 0xF, 0, MAX_MAG_BITS, "magnitude size (bits)"),
+    FieldRange(10, 0xF, 0, 15, "zero run length"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandContract:
+    """Documented value intervals for one kernel operand's *contents*.
+
+    ``ranges`` maps a trailing-dimension column index to a callable
+    ``params -> (lo, hi)`` (the key ``None`` bounds every element);
+    ``fields`` declares bit-packed sub-fields (see :class:`FieldRange`).
+    Operands without either entry carry no content contract — their
+    values may be anything their dtype allows, and any index derived
+    from them must be clamped before use.
+    """
+
+    role: str
+    ranges: Mapping = dataclasses.field(default_factory=dict)
+    fields: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """The verifier's per-kernel input contract, declared as data.
+
+    ``operands`` follow the pallas_call operand order. ``params`` used by
+    the range callables are supplied by kernel_check from the traced
+    cell's statics: chunk_bits, s_max, max_upm, n_luts, tile, ...
+    """
+
+    entry: str          # dotted path of the traced wrapper (docs/reports)
+    description: str
+    operands: tuple
+
+
+_HUFFMAN_OPERANDS = (
+    # (TILE, W) uint32 word windows: arbitrary bitstream content
+    OperandContract("words"),
+    # flattened (L*65536,) decode LUTs: bit-packed entries
+    OperandContract("luts", fields=LUT_FIELD_RANGES),
+    # (TILE, 2*MAX_UPM) LUT row schedule: row ids into the LUT table
+    OperandContract("rows", ranges={None: lambda p: (0, p["n_luts"] - 1)}),
+    # (TILE, 4) [p_entry, u, z, limit], all chunk-local:
+    #   p_entry — a lane's entry is its own chunk start (cold/speculative
+    #     states) or its predecessor's exit, which stops within one symbol
+    #     advance of its limit == this chunk's start;
+    #   limit   — chunk limits are clamped to the chunk's bit capacity.
+    OperandContract("meta", ranges={
+        0: lambda p: (0, p["chunk_bits"] + MAX_SYMBOL_ADVANCE - 1),
+        1: lambda p: (0, p["max_upm"] - 1),
+        2: lambda p: (0, 63),
+        3: lambda p: (0, p["chunk_bits"]),
+    }),
+    # (TILE, 1) units-per-MCU, floored to 1 for inert lanes
+    OperandContract("upm", ranges={None: lambda p: (1, p["max_upm"])}),
+)
+
+KERNEL_CONTRACTS: Dict[str, KernelContract] = {
+    "huffman-exits": KernelContract(
+        entry="repro.kernels.huffman.huffman.decode_exits_pallas",
+        description=(
+            "sync-phase subsequence decode: LUT gathers, word-window "
+            "fetches and the (p,u,z,n) state loop stay inside the "
+            "(TILE, chunk_words+2) window and the L*65536 LUT"),
+        operands=_HUFFMAN_OPERANDS,
+    ),
+    "huffman-write": KernelContract(
+        entry="repro.kernels.huffman.huffman.decode_coeffs_pallas",
+        description=(
+            "write pass: the exits contract plus the per-symbol "
+            "(pos, val) stream stores at pl.ds(i, 1) staying inside "
+            "(TILE, s_max)"),
+        operands=_HUFFMAN_OPERANDS,
+    ),
+    "idct": KernelContract(
+        entry="repro.kernels.idct.idct.fused_idct",
+        description=(
+            "fused dequant+IDCT matmul: no data-dependent indexing; "
+            "the contract is pure tiling (TILE_U x 64 tiles exactly "
+            "cover the padded unit axis)"),
+        operands=(OperandContract("coeffs"), OperandContract("rows"),
+                  OperandContract("m2")),
+    ),
+    "color": KernelContract(
+        entry="repro.kernels.color.color.upsample_color",
+        description=(
+            "chroma upsample + YCbCr->RGB: no data-dependent indexing; "
+            "the contract is tiling, incl. the chroma tiles "
+            "(TILE_H/fv, TILE_W/fh) whose sampling factors must divide "
+            "the luma tile"),
+        operands=(OperandContract("y"), OperandContract("cb"),
+                  OperandContract("cr")),
+    ),
+}
+
+
+#: Modules whose `.at[...].set(...)` scatters the kernel verifier proves
+#: duplicate-free (the `kernel-scatter-race` family). The
+#: `unsafe-scatter-set` lint rule exempts exactly these files; everywhere
+#: else a traced overwrite-scatter needs `.add`, an inline
+#: `# repro: allow[unsafe-scatter-set]`, or a baseline entry.
+VERIFIED_SCATTER_MODULES = ("repro/kernels/huffman/ops.py",)
+
+
+#: The kernel-verifier contract families, as data (docs/ANALYSIS.md
+#: renders this; `python -m repro.analysis kernels` reports coverage).
+KERNEL_CHECK_FAMILIES: Dict[str, str] = {
+    "kernel-bounds": (
+        "every in-kernel ref access (get/swap/masked_swap, incl. pl.ds "
+        "dynamic slices) and every unclamped gather index is proven "
+        "in-bounds by the IntRange lattice under the documented operand "
+        "intervals of KERNEL_CONTRACTS"),
+    "kernel-scatter-race": (
+        "the write-pass bulk `.at[tgt].set(mode='drop')` has provably "
+        "duplicate-free in-bounds targets (per-lane positions strictly "
+        "increase; seg_coeff_base ranges are disjoint; the shared "
+        "sentinel is past-the-end so it never writes) and declares "
+        "unique_indices=True; any other overwrite-scatter on traced "
+        "values is flagged"),
+    "kernel-tiling": (
+        "BlockSpec shapes x grid exactly cover every operand (no "
+        "remainder truncation, no tile past the end, tile divides the "
+        "dimension), evaluated from each index_map jaxpr over the whole "
+        "grid range; bucket-ladder capacities stay tile-aligned and the "
+        "shard_map pad-skip fast path agrees with the ladder rungs"),
 }
 
 

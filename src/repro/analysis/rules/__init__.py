@@ -2,8 +2,9 @@
 and ``check(module) -> iterable[Finding]``; add new rules here."""
 from __future__ import annotations
 
-from . import divergence, errors, f64, host_sync, static_fields
+from . import divergence, errors, f64, host_sync, scatter, static_fields
 
-ALL = (host_sync, static_fields, divergence, errors, f64)
+ALL = (host_sync, static_fields, divergence, errors, f64, scatter)
 
-__all__ = ["ALL", "host_sync", "static_fields", "divergence", "errors", "f64"]
+__all__ = ["ALL", "host_sync", "static_fields", "divergence", "errors",
+           "f64", "scatter"]

@@ -1,0 +1,76 @@
+"""unsafe-scatter-set: overwrite scatter with a dynamic index.
+
+``x.at[idx].set(v)`` with a *computed* index is an overwrite scatter:
+if ``idx`` ever holds a duplicate, the result is order-dependent — on
+GPU/TPU backends whichever store lands last wins, and XLA is free to
+reorder them. The decode write-pass scatters carry a structural
+duplicate-freeness proof (``python -m repro.analysis kernels``,
+family *kernel-scatter-race*); modules listed in
+``contracts.VERIFIED_SCATTER_MODULES`` are covered by that proof and
+exempt. Everywhere else, either
+
+* accumulate instead (``.at[idx].add`` — order-independent), or
+* prove the site and register it, or
+* suppress a reviewed site with ``# repro: allow[unsafe-scatter-set]``
+  (or a baseline entry naming the justification).
+
+Static indices (literals, slices of literals) cannot alias and are
+never flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..contracts import VERIFIED_SCATTER_MODULES
+
+NAME = "unsafe-scatter-set"
+DESCRIPTION = (".at[dynamic].set(...) overwrite scatter outside the "
+               "kernel verifier's proven modules")
+
+
+def _static_index(node: ast.AST) -> bool:
+    """True when the subscript cannot produce duplicate positions at
+    runtime: constants, unary +/- of constants, slices/tuples thereof."""
+    if isinstance(node, ast.Constant):  # ints, None, Ellipsis
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(
+            node.op, (ast.UAdd, ast.USub)):
+        return _static_index(node.operand)
+    if isinstance(node, ast.Slice):
+        return all(p is None or _static_index(p)
+                   for p in (node.lower, node.upper, node.step))
+    if isinstance(node, ast.Tuple):
+        return all(_static_index(e) for e in node.elts)
+    return False
+
+
+def _at_set_call(node: ast.Call):
+    """The index AST of an ``x.at[idx].set(...)`` call, else None."""
+    func = node.func
+    if not (isinstance(func, ast.Attribute) and func.attr == "set"):
+        return None
+    sub = func.value
+    if not isinstance(sub, ast.Subscript):
+        return None
+    base = sub.value
+    if not (isinstance(base, ast.Attribute) and base.attr == "at"):
+        return None
+    return sub.slice
+
+
+def check(mod):
+    if mod.path in VERIFIED_SCATTER_MODULES:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        idx = _at_set_call(node)
+        if idx is None or _static_index(idx):
+            continue
+        yield mod.finding(
+            NAME, node,
+            ".at[...].set with a computed index is an overwrite scatter "
+            "— duplicates are order-dependent; use .at[...].add, or "
+            "prove the site duplicate-free (python -m repro.analysis "
+            "kernels) and register it in contracts."
+            "VERIFIED_SCATTER_MODULES")

@@ -428,6 +428,40 @@ class BatchPlan:
 LADDER_STEP = 1.3
 
 
+def check_seg_coeff_disjoint(seg_coeff_base, total_units: int,
+                             what: str = "batch plan") -> None:
+    """The segment-disjointness invariant the kernel verifier consumes.
+
+    ``seg_coeff_base`` must start at 0, be non-decreasing, and stay
+    inside the dense coefficient extent ``total_units * 64``. Because
+    segment ``i``'s write clamp is ``seg_coeff_base[i+1] - 1`` (or
+    ``units_end - 1`` for the last), monotone bases make every segment's
+    writable coefficient range end exactly where the next begins — so
+    lanes of *different* segments can never collide, which is one of the
+    three legs of the write-pass scatter-race proof
+    (``analysis/kernel_check.py``; docs/KERNELS.md). Checked at plan
+    build so a violating plan never reaches a device.
+    """
+    b = np.asarray(seg_coeff_base, dtype=np.int64)
+    if b.size == 0:
+        return
+    if b[0] != 0:
+        raise contracts.ContractViolation(
+            f"{what}: seg_coeff_base[0] = {int(b[0])} != 0")
+    d = np.diff(b)
+    if d.size and d.min() < 0:
+        i = int(np.argmin(d))
+        raise contracts.ContractViolation(
+            f"{what}: seg_coeff_base not non-decreasing at segment {i}: "
+            f"{int(b[i])} -> {int(b[i + 1])} — segment write ranges "
+            f"would overlap and the bulk scatter could race")
+    end = int(total_units) * 64
+    if int(b[-1]) > end:
+        raise contracts.ContractViolation(
+            f"{what}: seg_coeff_base[-1] = {int(b[-1])} exceeds the "
+            f"dense coefficient extent {end} (= {total_units} units * 64)")
+
+
 def bucket_capacity(n: int, step: float = LADDER_STEP) -> int:
     """Smallest rung of the geometric capacity ladder that is >= ``n``.
 
@@ -1134,6 +1168,7 @@ def build_batch_plan(
 
     total_units = int(seg_units.sum())
     check_coeff_capacity(total_units, s_max=int(s_max))
+    check_seg_coeff_disjoint(seg_coeff_base, total_units)
 
     # ---- pixel-stage layout (uniform batches) ---------------------------------
     comp_unit_idx = comp_block_idx = comp_grid = None

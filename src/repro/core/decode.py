@@ -138,7 +138,12 @@ def decode_span(
             ok = o.active & (~o.invalid) & (idx <= write_max)
             # NB: sentinel must be past-the-end, not -1 (negative indices wrap).
             idx = jnp.where(ok, idx, buf.shape[0])
-            buf = buf.at[idx].set(o.coef, mode="drop")
+            # unique_indices: within one symbol step every lane writes a
+            # distinct index (lanes' write ranges are disjoint: bases are
+            # per-segment cumulative and n strictly increases), and the
+            # shared sentinel is dropped before writing. Machine-checked
+            # by `python -m repro.analysis kernels` (kernel-scatter-race).
+            buf = buf.at[idx].set(o.coef, mode="drop", unique_indices=True)
             return o.state, buf
 
         st, out = jax.lax.fori_loop(0, s_max, body, (st0, out))

@@ -52,6 +52,14 @@ def upsample_color(
     interpret: bool = None,
 ) -> jnp.ndarray:
     interpret = default_interpret(interpret)
+    if fv <= 0 or fh <= 0 or TILE_H % fv or TILE_W % fh:
+        # e.g. fv=3: the chroma BlockSpec (TILE_H//fv, TILE_W//fh) would
+        # floor to 2 rows and silently skip every third chroma row — the
+        # kernel-tiling contract's runtime twin (analysis/kernel_check.py)
+        raise ValueError(
+            f"sampling factors (fh={fh}, fv={fv}) must divide the luma "
+            f"tile ({TILE_H}x{TILE_W}); a non-dividing factor truncates "
+            f"the chroma BlockSpec ({TILE_H}//{fv} x {TILE_W}//{fh})")
     b, h, w = y.shape
     ph = (-h) % TILE_H
     pw = (-w) % TILE_W

@@ -204,6 +204,25 @@ def _tile_for(c: int, cap: int) -> int:
     return min(cap, -(-c // 8) * 8)
 
 
+def _check_lane_tiling(c: int, pad: int, tile: int) -> None:
+    """Runtime twin of the kernel-tiling contract (analysis/kernel_check).
+
+    The grid math below assumes the lane tile divides the padded lane
+    capacity exactly — a non-dividing tile would make the last grid step
+    read/write past the operands (or silently drop the remainder lanes).
+    _tile_for keeps this true for every capacity, so tripping here means
+    a tile override or ladder change broke the invariant; fail loudly
+    with the numbers instead of corrupting coefficients.
+    """
+    if tile <= 0 or (c + pad) % tile:
+        from ...core.bitstream import bucket_capacity
+        raise ValueError(
+            f"lane tiling broken: capacity {c} + pad {pad} = {c + pad} "
+            f"is not a multiple of lane tile {tile} (bucket ladder rung "
+            f"{bucket_capacity(c)}); pick a tile that divides the padded "
+            f"capacity (see _tile_for)")
+
+
 @functools.partial(
     jax.jit, static_argnames=("s_max", "min_code_bits", "chunk_words", "interpret")
 )
@@ -233,6 +252,7 @@ def decode_exits_pallas(
     )
     rows = jnp.pad(lut_rows.reshape(c, -1), ((0, pad), (0, 0)))
 
+    _check_lane_tiling(c, pad, tile)
     n_tiles = (c + pad) // tile
     max_upm = lut_rows.shape[1]
     out = pl.pallas_call(
@@ -295,6 +315,7 @@ def decode_coeffs_pallas(
     )
     rows = jnp.pad(lut_rows.reshape(c, -1), ((0, pad), (0, 0)))
 
+    _check_lane_tiling(c, pad, tile)
     n_tiles = (c + pad) // tile
     max_upm = lut_rows.shape[1]
     exits, pos, val = pl.pallas_call(

@@ -75,6 +75,16 @@ def _run(fn, dev, entry, idx, kw, mesh, lane_axis, out_specs_fn):
 
     n_dev = mesh.shape[lane_axis]
     c = entry.p.shape[0]
+    bad = {a.shape[0] for a in lane_args if a.shape[0] != c}
+    if bad:
+        # every lane operand shards over the same axis below; a length
+        # mismatch would otherwise surface as a cryptic shard_map/pallas
+        # shape error (or, with independent padding, silent lane skew)
+        raise ValueError(
+            f"lane operands disagree on capacity: entry has {c} lanes "
+            f"but co-operands have leading dims {sorted(bad)} — the "
+            f"plan's lane-axis arrays were built for a different "
+            f"capacity (see core/bitstream pack/split_plan)")
     pad = (-c) % n_dev
 
     def padl(a):
@@ -158,7 +168,13 @@ def decode_coeffs(
     ok = (pos >= 0) & (tgt <= write_max[:, None])
     # NB: sentinel must be past-the-end, not -1 (negative indices wrap).
     tgt = jnp.where(ok, tgt, out.shape[0])
-    out = out.at[tgt.reshape(-1)].set(val.reshape(-1), mode="drop")
+    # unique_indices: in-bounds targets are duplicate-free by construction
+    # (per-lane positions strictly increase; segments own disjoint ranges)
+    # and the shared sentinel is dropped before writing, so XLA may skip
+    # the scatter sort. Machine-checked: `python -m repro.analysis kernels`
+    # (the kernel-scatter-race family; docs/KERNELS.md).
+    out = out.at[tgt.reshape(-1)].set(val.reshape(-1), mode="drop",
+                                      unique_indices=True)
     return DecodeState(p, u, z, n), out
 
 

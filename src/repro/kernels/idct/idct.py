@@ -53,7 +53,13 @@ def fused_idct(
     interpret: bool = None,
 ) -> jnp.ndarray:
     interpret = default_interpret(interpret)
-    u, _ = coeffs.shape
+    u, width = coeffs.shape
+    if width != 64 or TILE_U % 2:
+        # the unit-pairing reshape below needs 64 lanes per unit and an
+        # even tile — kernel-tiling contract twin (analysis/kernel_check)
+        raise ValueError(
+            f"fused_idct needs (U, 64) coefficients and an even TILE_U; "
+            f"got width {width}, TILE_U {TILE_U}")
     nq = m_matrices.shape[0]
     # block-diagonalize each M for the unit-pairing trick
     eye2 = jnp.eye(2, dtype=m_matrices.dtype)

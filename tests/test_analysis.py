@@ -571,3 +571,189 @@ def test_donation_lowering_regex():
     assert check_donation_lowering(donor, "cell") == []
     vs = check_donation_lowering(plain, "cell")
     assert vs and vs[0].contract == "words-donated"
+
+
+# ---------------------------------------------------------------------------
+# unsafe-scatter-set lint fixtures
+# ---------------------------------------------------------------------------
+
+class TestUnsafeScatterSet:
+    def test_dynamic_index_fires(self):
+        fs = lint("""
+            import jax.numpy as jnp
+
+            def route(buf, idx, val):
+                return buf.at[idx].set(val, mode="drop")
+        """)
+        assert "unsafe-scatter-set" in rules_of(fs)
+
+    def test_computed_tuple_index_fires(self):
+        fs = lint("""
+            import jax.numpy as jnp
+
+            def route(buf, rows, val):
+                return buf.at[rows + 1, :].set(val)
+        """)
+        assert "unsafe-scatter-set" in rules_of(fs)
+
+    def test_static_index_clean(self):
+        fs = lint("""
+            import jax.numpy as jnp
+
+            def head(buf, val):
+                a = buf.at[0].set(val)
+                b = buf.at[1:4].set(val)
+                return a, b.at[-1, :].set(val)
+        """)
+        assert "unsafe-scatter-set" not in rules_of(fs)
+
+    def test_accumulating_add_clean(self):
+        fs = lint("""
+            import jax.numpy as jnp
+
+            def hist(buf, idx):
+                return buf.at[idx].add(1)
+        """)
+        assert "unsafe-scatter-set" not in rules_of(fs)
+
+    def test_verified_module_exempt(self):
+        from repro.analysis.lint import lint_source
+        src = textwrap.dedent("""
+            def write(out, tgt, val):
+                return out.at[tgt].set(val, mode="drop")
+        """)
+        fs = lint_source(src, "repro/kernels/huffman/ops.py")
+        assert "unsafe-scatter-set" not in rules_of(fs)
+        fs = lint_source(src, "repro/core/somewhere.py")
+        assert "unsafe-scatter-set" in rules_of(fs)
+
+    def test_inline_allow_suppresses(self):
+        fs = lint("""
+            def write(out, tgt, val):
+                # repro: allow[unsafe-scatter-set]
+                return out.at[tgt].set(val, mode="drop")
+        """)
+        assert "unsafe-scatter-set" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------------------
+# kernel verifier: lattice transfer functions, where-call rewrite, self-test
+# ---------------------------------------------------------------------------
+
+IR = contracts.IntRange
+
+
+class TestKernelLatticeTransfers:
+    def test_mod_signs(self):
+        assert contracts.IntRange(-7, 7).mod(IR.const(5)) == IR(-4, 4)
+        assert IR(0, 100).mod(IR.const(32)) == IR(0, 31)
+        # the remainder never exceeds the dividend itself
+        assert IR(0, 3).mod(IR.const(32)) == IR(0, 3)
+        assert IR.const(-13).mod(IR.const(5)) == IR.const(-3)
+        with pytest.raises(ValueError):
+            IR(0, 4).mod(IR.const(0))
+
+    def test_clamp_is_clip(self):
+        assert IR(-5, 90).clamp(0, 63) == IR(0, 63)
+        assert IR(10, 20).clamp(0, 63) == IR(10, 20)
+        assert IR(-5, 90).clamp_min(IR.const(0)) == IR(0, 90)
+        assert IR(-5, 90).clamp_max(IR.const(63)) == IR(-5, 63)
+
+    def test_shift_and_mask(self):
+        assert IR(0, 1054).shift_right(IR.const(5)) == IR(0, 32)
+        assert IR(-64, 1054).shift_right(IR(0, 5)) == IR(-64, 1054)
+        assert IR(-100, 3).bit_and_mask(0x1F) == IR(0, 31)
+        assert IR(0, 7).bit_and_mask(0x1F) == IR(0, 7)
+        with pytest.raises(ValueError):
+            IR(0, 4).shift_right(IR(-1, 2))
+
+    def test_join_meet_sub_scale(self):
+        assert IR(0, 3).join(IR(10, 12)) == IR(0, 12)
+        assert IR(0, 10).meet(IR(5, 99)) == IR(5, 10)
+        with pytest.raises(ValueError):
+            IR(0, 3).meet(IR(5, 9))
+        assert IR(0, 10) - IR(2, 3) == IR(-3, 8)
+        assert IR(-2, 3).scale(64) == IR(-128, 192)
+        with pytest.raises(ValueError):
+            IR(0, 1).scale(-1)
+
+    def test_block_cover_grid_extremes(self):
+        # exact cover passes
+        contracts.check_block_cover(128, 32, IR(0, 3), "ok")
+        # grid stops early: truncation
+        with pytest.raises(contracts.ContractViolation):
+            contracts.check_block_cover(128, 32, IR(0, 2), "short")
+        # grid overruns the operand
+        with pytest.raises(contracts.ContractViolation):
+            contracts.check_block_cover(128, 32, IR(0, 4), "long")
+        # first tile does not start at the origin
+        with pytest.raises(contracts.ContractViolation):
+            contracts.check_block_cover(128, 32, IR(1, 4), "offset")
+
+    def test_tile_origin_range(self):
+        assert contracts.tile_origin_range(IR(0, 3), 32) == IR(0, 96)
+
+
+class TestKernelVerifier:
+    def test_where_call_rewrites_to_callsite_select(self):
+        """jnp.where lowers to a pjit of one *shared* body jaxpr; the
+        verifier must resolve each call's select on its own call-site
+        atoms, not the last call's (the alias-clobber class)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis import kernel_check as kc
+
+        def f(c, x, y):
+            a = jnp.where(c, x, y)       # two calls sharing one body
+            b = jnp.where(~c, y, x + 1)
+            return a, b
+
+        closed = jax.make_jaxpr(f)(np.zeros(4, bool),
+                                   np.zeros(4, np.int32),
+                                   np.zeros(4, np.int32))
+        dm = kc.DefMap().build(closed.jaxpr)
+        out_a, out_b = closed.jaxpr.outvars
+        da, db = dm.rootdef(out_a), dm.rootdef(out_b)
+        assert da is not None and da.primitive.name == "select_n"
+        assert db is not None and db.primitive.name == "select_n"
+        # call-site operands, not shared-body invars: a's cases are the
+        # outer x/y vars themselves
+        x_var, y_var = closed.jaxpr.invars[1], closed.jaxpr.invars[2]
+        assert {dm.root(v) for v in da.invars[1:]} == {x_var, y_var}
+        # b's true case is x + 1, a distinct expression
+        assert any(
+            (d := dm.rootdef(v)) is not None and d.primitive.name == "add"
+            for v in db.invars[1:])
+
+    def test_sentinel_split_sees_through_index_wrap(self):
+        """.at[].set inserts a negative-index wrap select between the
+        user's where(ok, tgt, N) and the scatter; the sentinel matcher
+        must look through both it and the pjit wrapper."""
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis import kernel_check as kc
+
+        def f(x, tgt, ok, val):
+            idx = jnp.where(ok, tgt, x.shape[0])
+            # repro: allow[unsafe-scatter-set] — fixture under test
+            return x.at[idx].set(val, mode="drop", unique_indices=True)
+
+        closed = jax.make_jaxpr(f)(
+            np.zeros(8, np.int32), np.zeros(4, np.int32),
+            np.zeros(4, bool), np.zeros(4, np.int32))
+        dm = kc.DefMap().build(closed.jaxpr)
+        scatter = [e for e in kc.iter_eqns(closed.jaxpr)
+                   if e.primitive.name == "scatter"]
+        assert scatter, "fixture did not lower to a scatter"
+        split = kc._sentinel_split(dm, scatter[0].invars[1], 8)
+        assert split is not None
+        ok_atom, real_atom = split
+        assert dm.root(real_atom) is closed.jaxpr.invars[1]
+        assert dm.root(ok_atom) is closed.jaxpr.invars[2]
+
+    @pytest.mark.slow
+    def test_self_test_catches_all_three_seeds(self):
+        """Acceptance criterion: the verifier flags an off-by-one pl.ds,
+        a duplicate scatter index, and a non-covering BlockSpec."""
+        from repro.analysis import kernel_check as kc
+        assert kc.run_self_test() == []
