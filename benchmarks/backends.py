@@ -1,31 +1,66 @@
-"""Beyond-paper: decode-backend comparison (jnp reference vs Pallas kernels).
+"""Beyond-paper: decode-backend comparison (jnp reference vs Pallas
+kernels, per fusion mode).
 
-Times the full decode (sync + write pass + pixel stages) per sync schedule
-on both backends and reports the speedup. On the CPU CI container the
-Pallas backend runs in interpret mode, so the ratio there measures
-interpreter overhead, not kernel quality — the row exists to (a) prove the
-backend is live end-to-end on every schedule and (b) give TPU/GPU runs a
-ready-made A/B (same invocation, compiled kernels).
+Times the full decode (sync + write pass + pixel stages) per sync
+schedule for every (backend, fuse) variant and reports, per variant, the
+kernel-launch accounting (``ParallelDecoder.launch_stats()``): Pallas
+launch sites, total jaxpr equations (the proxy for XLA kernel launches
+between Pallas calls), and the analytic inter-stage HBM bytes the fuse
+mode eliminates. ``fuse="post"`` must show fewer equations and lower HBM
+bytes than ``fuse="none"`` at a warm-step time no worse — that is the
+fused megakernel's acceptance row.
+
+On the CPU CI container the Pallas backend runs in interpret mode, so
+the jnp/pallas time ratio there measures interpreter overhead, not
+kernel quality — the rows exist to (a) prove every (schedule, fuse)
+variant is live end-to-end and (b) give TPU/GPU runs a ready-made A/B.
+``fuse="full"`` (the in-kernel coefficient store) runs on one schedule
+only: its per-symbol store loop is quadratically slow under the
+interpreter and its accounting is schedule-independent.
 """
 from __future__ import annotations
 
 from .common import decode_time, emit, load_dataset
 
 
+def _variants(sync: str):
+    out = [("jnp", None), ("pallas", "none"), ("pallas", "post")]
+    if sync == "jacobi":
+        out.append(("pallas", "full"))
+    return out
+
+
 def run_rows():
     rows = []
     ds = load_dataset("newyork")
     for sync in ("jacobi", "faithful", "specmap", "sequential"):
-        times = {}
-        for backend in ("jnp", "pallas"):
-            t, dec = decode_time(ds, sync, backend=backend, rounds=2)
-            times[backend] = t
-        rows.append({
-            "name": f"backends/newyork/{sync}",
-            "us_per_call": times["pallas"] * 1e6,
-            "derived": (f"jnp_us={times['jnp']*1e6:.1f}"
-                        f";pallas_over_jnp={times['pallas']/times['jnp']:.2f}x"),
-        })
+        jnp_t = None
+        for backend, fuse in _variants(sync):
+            t, dec = decode_time(ds, sync, backend=backend, fuse=fuse,
+                                 rounds=2)
+            name = f"backends/newyork/{sync}/{backend}"
+            derived = [f"backend={backend}"]
+            if backend == "jnp":
+                jnp_t = t
+            else:
+                name += f"-{fuse}"
+                st = dec.launch_stats()
+                derived += [
+                    f"fuse={st['fuse']}",
+                    f"pallas_calls={st['pallas_calls']}",
+                    f"jaxpr_eqns={st['jaxpr_eqns']}",
+                    f"hbm_bytes={st['inter_stage_bytes']}",
+                    f"store_fused={int(st['store_fused'])}",
+                    f"pixels_fused={int(st['pixels_fused'])}",
+                ]
+                if jnp_t:
+                    derived += [f"jnp_us={jnp_t*1e6:.1f}",
+                                f"pallas_over_jnp={t/jnp_t:.2f}x"]
+            rows.append({
+                "name": name,
+                "us_per_call": t * 1e6,
+                "derived": ";".join(derived),
+            })
     return rows
 
 

@@ -41,11 +41,11 @@ def time_call(fn: Callable, *args, warmup: int = 1, rounds: int = 3) -> float:
 
 
 def decode_time(ds: Dataset, sync: str, chunk_bits: int = None,
-                rounds: int = 3, backend: str = None
+                rounds: int = 3, backend: str = None, fuse: str = None
                 ) -> Tuple[float, ParallelDecoder]:
     dec = ParallelDecoder.from_bytes(
         ds.jpeg_bytes, chunk_bits=chunk_bits or ds.spec.subsequence_bits,
-        sync=sync, backend=backend or BENCH_BACKEND)
+        sync=sync, backend=backend or BENCH_BACKEND, fuse=fuse)
 
     def run():
         out = dec.decode(emit="rgb")

@@ -23,7 +23,10 @@ import subprocess
 import sys
 
 #: Bump when the trajectory line layout changes; readers filter on it.
-TRAJECTORY_SCHEMA = 1
+#: Schema 2: one line per (backend, fuse) variant when the "backends"
+#: suite ran (variant lines carry decode_us + launch accounting), plus
+#: the global line (backend = the env default) with the health metrics.
+TRAJECTORY_SCHEMA = 2
 
 
 def _git_sha() -> str:
@@ -64,20 +67,51 @@ def trajectory_metrics(rows) -> dict:
     return m
 
 
+def backend_variant_entries(rows):
+    """One trajectory entry per (backend, fuse) variant row of the
+    "backends" suite — historically only the env-default backend's
+    metrics were recorded; now every backend (and every Pallas fuse
+    mode) gets its own line."""
+    entries = []
+    for r in rows:
+        if not r["name"].startswith("backends/"):
+            continue
+        d = _derived_fields(r)
+        backend = d.get("backend")
+        if backend is None:
+            continue
+        sync = r["name"].split("/")[2] if r["name"].count("/") >= 2 else ""
+        metrics = {"decode_us": round(r["us_per_call"], 1)}
+        for k in ("pallas_calls", "jaxpr_eqns", "hbm_bytes",
+                  "store_fused", "pixels_fused"):
+            if k in d:
+                metrics[k] = int(float(d[k]))
+        entries.append({
+            "backend": backend,
+            "fuse": d.get("fuse"),
+            "sync": sync,
+            "metrics": metrics,
+        })
+    return entries
+
+
 def append_trajectory(path: str, rows, suites) -> None:
     from .common import BENCH_BACKEND, BENCH_SCALE
-    entry = {
+    base = {
         "schema": TRAJECTORY_SCHEMA,
         "git_sha": _git_sha(),
-        "backend": BENCH_BACKEND,
         "scale": BENCH_SCALE,
         "suites": list(suites),
-        "n_rows": len(rows),
-        "metrics": trajectory_metrics(rows),
     }
+    entries = [dict(base, backend=BENCH_BACKEND, n_rows=len(rows),
+                    metrics=trajectory_metrics(rows))]
+    for v in backend_variant_entries(rows):
+        entries.append(dict(base, **v))
     with open(path, "a") as f:
-        f.write(json.dumps(entry, sort_keys=True) + "\n")
-    print(f"# appended trajectory line to {path}", file=sys.stderr)
+        for entry in entries:
+            f.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"# appended {len(entries)} trajectory line"
+          f"{'s' if len(entries) != 1 else ''} to {path}", file=sys.stderr)
 
 
 def main() -> None:

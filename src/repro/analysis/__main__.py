@@ -99,11 +99,13 @@ def main(argv=None) -> int:
     pk = sub.add_parser(
         "kernels",
         help="kernel memory-safety verifier: bounds, tiling and "
-             "scatter-race over the Pallas decode path")
+             "scatter-race over the Pallas decode path, incl. the fused "
+             "cells and every autotune tile candidate")
     pk.add_argument("--self-test", action="store_true",
-                    help="also prove the verifier catches three seeded "
+                    help="also prove the verifier catches four seeded "
                          "violations (off-by-one pl.ds, duplicate "
-                         "scatter index, non-covering BlockSpec)")
+                         "scatter index, non-covering BlockSpec, "
+                         "fused-cell tile misalignment)")
     pk.add_argument("--verbose", action="store_true")
     pk.set_defaults(fn=_cmd_kernels)
 

@@ -528,6 +528,33 @@ KERNEL_CONTRACTS: Dict[str, KernelContract] = {
         operands=(OperandContract("y"), OperandContract("cb"),
                   OperandContract("cr")),
     ),
+    "huffman-write-store": KernelContract(
+        entry="repro.kernels.fused.store.decode_coeffs_store_pallas",
+        description=(
+            "fuse='full' write pass: the exits contract plus an "
+            "in-kernel clamped coefficient store into the whole-buffer "
+            "(n_coef,) output ref; race-freedom reduces to the stream "
+            "write kernel's monotonicity proof (same _symbol_step "
+            "recurrence) plus the sequential grid/fori_loop order"),
+        operands=_HUFFMAN_OPERANDS + (
+            # (TILE, 1) absolute dense-coefficient base per lane
+            OperandContract("write_base",
+                            ranges={None: lambda p: (0, p["n_coef"] - 1)}),
+            # (TILE, 1) inclusive clamp; -1 on pad lanes (never write)
+            OperandContract("write_max",
+                            ranges={None: lambda p: (-1, p["n_coef"] - 1)}),
+        ),
+    ),
+    "fused-pixels": KernelContract(
+        entry="repro.kernels.fused.pixels.fused_pixels_pallas",
+        description=(
+            "fused dequant+IDCT+assemble+upsample+color megakernel: no "
+            "data-dependent indexing (the per-component unit slices are "
+            "static in the MCU-blocked unit order); the contract is "
+            "pure tiling over the padded MCU axis"),
+        operands=(OperandContract("coeffs"), OperandContract("rows"),
+                  OperandContract("m2")),
+    ),
 }
 
 
@@ -546,20 +573,26 @@ KERNEL_CHECK_FAMILIES: Dict[str, str] = {
         "every in-kernel ref access (get/swap/masked_swap, incl. pl.ds "
         "dynamic slices) and every unclamped gather index is proven "
         "in-bounds by the IntRange lattice under the documented operand "
-        "intervals of KERNEL_CONTRACTS"),
+        "intervals of KERNEL_CONTRACTS — incl. the fused cells "
+        "(write-store, fused-pixels) at EVERY autotune tile candidate, "
+        "not just the tuner's winner"),
     "kernel-scatter-race": (
         "the write-pass bulk `.at[tgt].set(mode='drop')` has provably "
         "duplicate-free in-bounds targets (per-lane positions strictly "
         "increase; seg_coeff_base ranges are disjoint; the shared "
         "sentinel is past-the-end so it never writes) and declares "
         "unique_indices=True; any other overwrite-scatter on traced "
-        "values is flagged"),
+        "values is flagged. The fuse='full' in-kernel store is accepted "
+        "by reduction: it replays the same _symbol_step recurrence with "
+        "sequential writes, so its cells only pass while the stream "
+        "kernel's monotone-pos proof passes in the same run"),
     "kernel-tiling": (
         "BlockSpec shapes x grid exactly cover every operand (no "
         "remainder truncation, no tile past the end, tile divides the "
         "dimension), evaluated from each index_map jaxpr over the whole "
-        "grid range; bucket-ladder capacities stay tile-aligned and the "
-        "shard_map pad-skip fast path agrees with the ladder rungs"),
+        "grid range; bucket-ladder capacities stay tile-aligned for "
+        "every autotune lane-tile candidate and the shard_map pad-skip "
+        "fast path agrees with the ladder rungs"),
 }
 
 

@@ -595,6 +595,17 @@ class KernelInterp:
             rng = x.rng.clamp_min(lo.rng).clamp_max(hi.rng)
         self._bind_fit(ov := eqn.outvars[0], rng)
 
+    def _p_dynamic_slice(self, eqn):
+        # a dynamic slice's contents are a subset of its source's
+        # contents whatever the start indices, so the *value* interval
+        # passes through — but not the identity/provenance (the slice
+        # position is data-dependent), hence interpreter-only and NOT in
+        # _PASSTHROUGH. Needed for per-lane scalar reads like `idx[l]`
+        # in the fused-store kernel's fori_loop.
+        src = self.get(eqn.invars[0])
+        ov = eqn.outvars[0]
+        self.bind(ov, AV(_fit(src.rng, ov.aval.dtype)))
+
     def _p_and(self, eqn):
         a_atom, b_atom = eqn.invars
         a, b = self.get(a_atom), self.get(b_atom)
@@ -1444,6 +1455,9 @@ def check_plan_cells(name: str, plan, verbose: bool = False):
     from ..core import decode as D
     from ..core.bitstream import plan_shape
     from ..core.state import DecodeState
+    from ..kernels.autotune import TILE_CANDIDATES
+    from ..kernels.fused import ops as FOPS
+    from ..kernels.fused.pixels import fused_pixels_pallas
     from ..kernels.huffman import ops as HOPS
     from ..kernels.huffman.huffman import decode_exits_pallas
     from ..kernels.idct.idct import fused_idct
@@ -1468,6 +1482,9 @@ def check_plan_cells(name: str, plan, verbose: bool = False):
         out.append(Violation("kernel-scatter-race", name, str(e)))
 
     # -- exits kernel at actual and at bucketed capacities ----------------
+    # Every autotune lane-tile candidate gets its own cell: the tuner may
+    # pick any of them per device, so bounds + tiling must hold for all,
+    # not just the winner.
     for tag, nw, nc, sm, cb in (
         ("", len(plan.words), c, plan.s_max, plan.chunk_bits),
         (":bucketed", None, None, None, None),
@@ -1480,36 +1497,75 @@ def check_plan_cells(name: str, plan, verbose: bool = False):
             p2 = dict(params, chunk_bits=cb, s_max=sm)
         else:
             kw2, p2 = kw, params
-        cell = f"huffman-exits@{name}{tag}"
-        closed = jax.make_jaxpr(
-            functools.partial(decode_exits_pallas, **kw2))(
-                *_huffman_args(nw, n_luts, nc, max_upm))
-        out += _check_cell(cell, closed, contracts_["huffman-exits"], p2)
-        n_cells += 1
-        if verbose:
-            print(f"checked {cell}")
+        for et in TILE_CANDIDATES["exits_tile"]:
+            cell = f"huffman-exits@{name}{tag}:t{et}"
+            closed = jax.make_jaxpr(
+                functools.partial(decode_exits_pallas, tile=et, **kw2))(
+                    *_huffman_args(nw, n_luts, nc, max_upm))
+            out += _check_cell(cell, closed, contracts_["huffman-exits"], p2)
+            n_cells += 1
+            if verbose:
+                print(f"checked {cell}")
 
     # -- write pass: kernel + the bulk scatter, in one trace --------------
     dev = {k: _sds(v.shape, v.dtype) for k, v in plan.device_arrays().items()}
     n_coef = plan.total_units * 64
 
-    def write_cell(dev, p, out_buf, wb, wm):
+    def write_cell(dev, p, out_buf, wb, wm, *, tile):
         z = jnp.zeros_like(p)
         entry = DecodeState(p, z, z, z)
         return HOPS.decode_coeffs(
             dev, entry, out=out_buf, write_base=wb, write_max=wm,
             s_max=plan.s_max, min_code_bits=plan.min_code_bits,
-            chunk_bits=plan.chunk_bits, interpret=True)
+            chunk_bits=plan.chunk_bits, tile=tile, interpret=True)
 
-    cell = f"write-pass@{name}"
-    closed = jax.make_jaxpr(write_cell)(
-        dev, _sds((c,), i32), _sds((n_coef,), i32),
-        _sds((c,), i32), _sds((c,), i32))
-    out += _check_cell(cell, closed, contracts_["huffman-write"], params,
-                       scatter=True)
-    n_cells += 1
-    if verbose:
-        print(f"checked {cell}")
+    stream_race_ok = True
+    for wt in TILE_CANDIDATES["write_tile"]:
+        cell = f"write-pass@{name}:t{wt}"
+        closed = jax.make_jaxpr(functools.partial(write_cell, tile=wt))(
+            dev, _sds((c,), i32), _sds((n_coef,), i32),
+            _sds((c,), i32), _sds((c,), i32))
+        vs = _check_cell(cell, closed, contracts_["huffman-write"], params,
+                         scatter=True)
+        stream_race_ok &= not any(
+            v.family == "kernel-scatter-race" for v in vs)
+        out += vs
+        n_cells += 1
+        if verbose:
+            print(f"checked {cell}")
+
+    # -- fuse="full" in-kernel store --------------------------------------
+    # Race-freedom of the in-kernel store is accepted by *reduction*: it
+    # replays the stream kernel's per-symbol recurrence (_symbol_step),
+    # whose pos stream the cells above prove monotone, and serializes the
+    # writes (sequential grid + fori_loop). The reduction is only sound
+    # while the stream proof holds — if it broke, every store cell fails.
+    def store_cell(dev, p, out_buf, wb, wm, *, tile):
+        z = jnp.zeros_like(p)
+        entry = DecodeState(p, z, z, z)
+        return FOPS.decode_coeffs_full(
+            dev, entry, out=out_buf, write_base=wb, write_max=wm,
+            s_max=plan.s_max, min_code_bits=plan.min_code_bits,
+            chunk_bits=plan.chunk_bits, tile=tile, interpret=True)
+
+    p_store = dict(params, n_coef=n_coef)
+    for wt in TILE_CANDIDATES["write_tile"]:
+        cell = f"write-store@{name}:t{wt}"
+        closed = jax.make_jaxpr(functools.partial(store_cell, tile=wt))(
+            dev, _sds((c,), i32), _sds((n_coef,), i32),
+            _sds((c,), i32), _sds((c,), i32))
+        out += _check_cell(cell, closed, contracts_["huffman-write-store"],
+                           p_store)
+        if not stream_race_ok:
+            out.append(Violation(
+                "kernel-scatter-race", cell,
+                "the in-kernel coefficient store is accepted by reduction "
+                "to the stream write kernel's monotone-pos proof, which "
+                "FAILED for this plan — the store's race-freedom is "
+                "unproven"))
+        n_cells += 1
+        if verbose:
+            print(f"checked {cell}")
 
     # -- the jnp write pass shares the scatter contract -------------------
     def jnp_write_cell(dev, p, out_buf, wb, wm):
@@ -1544,8 +1600,29 @@ def check_plan_cells(name: str, plan, verbose: bool = False):
     if verbose:
         print(f"checked {cell}")
 
+    # -- fused pixel megakernel (fuse="post"|"full"), per MCU-tile --------
+    sh = plan_shape(plan)
+    g = sh.geometry
+    if sh.uniform and g is not None and FOPS.pixels_fusible(g):
+        upm = g.units_per_mcu
+        n_mcus = plan.total_units // upm
+        f32 = jnp.float32
+        for mt in TILE_CANDIDATES["mcu_tile"]:
+            cell = f"fused-pixels@{name}:t{mt}"
+            closed = jax.make_jaxpr(functools.partial(
+                fused_pixels_pallas, comp_h=tuple(g.comp_h),
+                comp_v=tuple(g.comp_v), h_max=g.h_max, v_max=g.v_max,
+                upm=upm, tile=mt, interpret=True))(
+                    _sds((n_mcus * upm, 64), i32),
+                    _sds((nq, 64, 64), f32),
+                    _sds((n_mcus * upm,), i32))
+            out += _check_cell(cell, closed, contracts_["fused-pixels"], {})
+            n_cells += 1
+            if verbose:
+                print(f"checked {cell}")
+
     # -- bucket-ladder / pad-skip alignment -------------------------------
-    out += check_ladder_alignment(name, plan_shape(plan))
+    out += check_ladder_alignment(name, sh)
     return out, n_cells
 
 
@@ -1579,6 +1656,7 @@ def check_ladder_alignment(name: str, shape) -> List[Violation]:
     padding when the lane capacity divides the mesh) agrees with the
     ladder — a bucketed plan's lane capacity is n_lanes equal blocks."""
     from ..core.bitstream import bucket_capacity
+    from ..kernels.autotune import TILE_CANDIDATES
     from ..kernels.huffman.huffman import TILE_C, WRITE_TILE_C, _tile_for
 
     out: List[Violation] = []
@@ -1588,9 +1666,13 @@ def check_ladder_alignment(name: str, shape) -> List[Violation]:
             f"bucketed lane capacity {shape.n_chunks} is not a multiple "
             f"of n_lanes {shape.n_lanes}: the shard_map pad-skip fast "
             f"path would re-pad every batch"))
+    # every lane-tile cap the autotuner may pick, plus the defaults
+    caps = sorted({TILE_C, WRITE_TILE_C}
+                  | set(TILE_CANDIDATES["exits_tile"])
+                  | set(TILE_CANDIDATES["write_tile"]))
     rung = 1
     while rung <= shape.n_chunks:
-        for cap in (TILE_C, WRITE_TILE_C):
+        for cap in caps:
             tile = _tile_for(rung, cap)
             pad = (-rung) % tile
             if (rung + pad) % tile:
@@ -1608,8 +1690,10 @@ def check_ladder_alignment(name: str, shape) -> List[Violation]:
 
 def run_self_test(verbose: bool = False) -> List[str]:
     """Prove the verifier catches what it claims to catch: an off-by-one
-    pl.ds, a duplicated scatter index, and a non-covering BlockSpec must
-    each be flagged by their family."""
+    pl.ds, a duplicated scatter index, a non-covering BlockSpec, and a
+    misaligned fused-pixels tile must each be flagged by their family."""
+    import functools
+
     failures: List[str] = []
 
     # 1. off-by-one pl.ds: rows [1, 8] into an 8-row operand
@@ -1666,6 +1750,36 @@ def run_self_test(verbose: bool = False) -> List[str]:
     elif verbose:
         print(f"self-test truncating-blockspec caught: {vs[0].detail}")
 
+    # 4. misaligned fused-pixels MCU tile: the real megakernel launched
+    # with a grid that covers only 8 of 10 MCUs (tile_m=4, grid=(2,)) —
+    # exactly the bug a bad autotune candidate would introduce if the
+    # fused cells' tiling contract were not enforced
+    from ..kernels.fused.pixels import _pixels_kernel
+
+    upm, tile_m = 6, 4  # 4:2:0 layout: comp (2,1,1)x(2,1,1), h_max=v_max=2
+    fn = pl.pallas_call(
+        functools.partial(_pixels_kernel, nq=1, upm=upm,
+                          comp_h=(2, 1, 1), comp_v=(2, 1, 1),
+                          h_max=2, v_max=2, tile_m=tile_m),
+        grid=(2,),
+        in_specs=[
+            pl.BlockSpec((tile_m * upm, 64), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m * upm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 128, 128), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, 3, 16, 16), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((10, 3, 16, 16), jnp.float32),
+        interpret=True)
+    closed = jax.make_jaxpr(fn)(
+        _sds((10 * upm, 64), jnp.float32), _sds((10 * upm, 1), jnp.int32),
+        _sds((1, 128, 128), jnp.float32))
+    vs = _check_cell("self-test:fused-tile-misalign", closed, None, {})
+    if not any(v.family == "kernel-tiling" for v in vs):
+        failures.append("seeded fused-cell tile misalignment not caught "
+                        "by kernel-tiling")
+    elif verbose:
+        print(f"self-test fused-tile-misalign caught: {vs[0].detail}")
+
     return failures
 
 
@@ -1689,8 +1803,9 @@ def run(self_test: bool = False, verbose: bool = False) -> int:
         for f in failures:
             violations.append(Violation("self-test", "seeded", f))
         if not failures:
-            print("self-test: all 3 seeded violations caught (off-by-one "
-                  "pl.ds, duplicate scatter index, non-covering BlockSpec)")
+            print("self-test: all 4 seeded violations caught (off-by-one "
+                  "pl.ds, duplicate scatter index, non-covering BlockSpec, "
+                  "fused-cell tile misalignment)")
 
     for v in violations:
         print(v.format())

@@ -17,8 +17,18 @@ Decode backends:  "jnp" (default; the pure-JAX reference hot loop) and
 "pallas" (the kernels under repro.kernels — Huffman subsequence decode,
 coefficient write pass, and fused IDCT). Every sync schedule runs on either
 backend and the two are bit-identical; on a mesh the Pallas path runs under
-shard_map over the chunk-lane axis. ``use_kernels=True`` is the legacy
-spelling of ``backend="pallas"``.
+shard_map over the chunk-lane axis. ``use_kernels=True`` is the deprecated
+legacy spelling of ``backend="pallas"``.
+
+Fusion (``fuse="none"|"post"|"full"``, Pallas only; default "post" via
+``kernels.backend.resolve_fuse``): "post" collapses the post-entropy
+pixel chain (dequant + de-zigzag + IDCT + upsample + color convert) into
+one launch per MCU tile (``kernels/fused``); "full" additionally moves
+the write pass's stream+scatter into an in-kernel coefficient store
+wherever the verifier's scatter-race proof holds (off-mesh, VMEM-sized
+buffers), falling back to the stream form elsewhere. All fuse modes are
+bit-identical; lane/MCU tile sizes come from ``kernels/autotune`` and are
+part of the program cache key, so tuning never retraces a warm bucket.
 
 Compile-once streaming:  the compiled decoder is keyed on the batch's
 static :class:`~repro.core.bitstream.PlanShape` (capacities bucketed up a
@@ -42,7 +52,9 @@ import jax.numpy as jnp
 
 from . import decode as D
 from ..dist import sharding as S
-from ..kernels.backend import check_backend, resolve_backend
+from ..kernels.autotune import TileConfig, autotune_enabled, autotune_tiles
+from ..kernels.backend import (check_backend, check_fuse, resolve_backend,
+                               resolve_fuse)
 from ..jpeg.format import parse_jpeg, segment_byte_bounds, unstuff_scan
 from .bitstream import (BatchPlan, BatchValidation, LADDER_STEP, PlanShape,
                         STATUS_OK, bucket_capacity, build_batch_plan,
@@ -160,10 +172,19 @@ class DecodeProgram:
     sync: str
     backend: str
     interpret: Optional[bool]
+    fuse: str = "none"
+    tiles: Optional[TileConfig] = None
     coeffs_fn: object = None
     pixels_fn: object = None
     coeffs_traces: int = 0
     pixels_traces: int = 0
+    # effective fusion, recorded at trace time: fuse="full" only engages
+    # its in-kernel store off-mesh within the VMEM budget, and the fused
+    # pixel kernel only engages off-mesh for 3-component uniform batches
+    # (the gates in kernels/fused/ops.py); elsewhere each falls back to
+    # the stream/unfused form, bit-identically
+    store_fused: bool = False
+    pixels_fused: bool = False
 
     @property
     def compiles(self) -> int:
@@ -190,30 +211,39 @@ def _filter_cpu_donation_warning() -> None:
 def decode_program(shape: PlanShape, sync: str = "jacobi",
                    backend: str = "jnp",
                    interpret: Optional[bool] = None,
-                   idct_impl=None) -> DecodeProgram:
-    """The shared compiled decoder for a (shape, sync, backend) bucket.
+                   idct_impl=None, fuse: str = "none",
+                   tiles: Optional[TileConfig] = None) -> DecodeProgram:
+    """The shared compiled decoder for a (shape, sync, backend, fuse,
+    tiles) bucket.
 
     Programs are cached at module level: a stream of distinct batches that
     bucket to the same shape reuses one jitted function and compiles only
     on the first batch (plus once more per distinct mesh/rules context,
-    which is part of the jit key via ``trace_token``). A custom
-    ``idct_impl`` only affects the pixel stage, so its (uncacheable —
-    identity cannot key it) program still *shares* the cached entropy
-    stage: streaming with a custom IDCT keeps the compile-once coeffs
-    path, and only the pixel jit is per-decoder.
+    which is part of the jit key via ``trace_token``). The autotuned
+    :class:`TileConfig` is part of the key, so a tuned bucket and an
+    untuned bucket never share (or invalidate) a program, and re-resolving
+    the same tiles for a warm bucket is a pure cache hit — zero retraces.
+    A custom ``idct_impl`` only affects the pixel stage, so its
+    (uncacheable — identity cannot key it) program still *shares* the
+    cached entropy stage: streaming with a custom IDCT keeps the
+    compile-once coeffs path, and only the pixel jit is per-decoder
+    (custom IDCTs pin the unfused pixel chain).
     """
     assert sync in ("jacobi", "faithful", "sequential", "specmap")
     check_backend(backend)
+    check_fuse(fuse, backend)
     _filter_cpu_donation_warning()
-    key = (shape, sync, backend, interpret)
+    key = (shape, sync, backend, interpret, fuse, tiles)
     prog = _PROGRAMS.get(key)
     if prog is None:
-        prog = _build_program(shape, sync, backend, interpret, None)
+        prog = _build_program(shape, sync, backend, interpret, None, fuse,
+                              tiles)
         _PROGRAMS[key] = prog
     if idct_impl is None:
         return prog
     custom = DecodeProgram(shape=shape, sync=sync, backend=backend,
-                           interpret=interpret, coeffs_fn=prog.coeffs_fn)
+                           interpret=interpret, fuse=fuse, tiles=tiles,
+                           coeffs_fn=prog.coeffs_fn)
     if shape.uniform:
         custom.pixels_fn = _build_pixels_fn(shape, idct_impl, custom)
     return custom
@@ -239,7 +269,7 @@ def decode_program_stats() -> Dict:
         "pixels_compiles": sum(p.pixels_traces for p in progs),
         "buckets": [
             {"bucket": p.shape.label(), "sync": p.sync, "backend": p.backend,
-             "compiles": p.compiles}
+             "fuse": p.fuse, "compiles": p.compiles}
             for p in progs
         ],
     }
@@ -258,12 +288,18 @@ def _slice_units(coeffs: Array, n_units: int, trace_token) -> Array:
 
 
 def _build_program(shape: PlanShape, sync: str, backend: str,
-                   interpret: Optional[bool], idct_impl) -> DecodeProgram:
+                   interpret: Optional[bool], idct_impl,
+                   fuse: str = "none",
+                   tiles: Optional[TileConfig] = None) -> DecodeProgram:
     prog = DecodeProgram(shape=shape, sync=sync, backend=backend,
-                         interpret=interpret)
+                         interpret=interpret, fuse=fuse, tiles=tiles)
+    exits_tile = tiles.exits_tile if tiles is not None else None
+    write_tile = tiles.write_tile if tiles is not None else None
     if idct_impl is None and backend == "pallas":
         from ..kernels.idct.ops import idct_units
-        idct_impl = functools.partial(idct_units, interpret=interpret)
+        idct_impl = functools.partial(
+            idct_units, tile=tiles.unit_tile if tiles is not None else None,
+            interpret=interpret)
     idct_impl = idct_impl or D.idct_units_folded
     sh = shape
     # static at trace time: identity plans (the default) keep the old
@@ -285,8 +321,8 @@ def _build_program(shape: PlanShape, sync: str, backend: str,
             from ..kernels.huffman import ops as HK
             decode_exits = HK.make_decode_exits(
                 s_max=sh.s_max, min_code_bits=sh.min_code_bits,
-                chunk_bits=sh.chunk_bits, interpret=interpret,
-                mesh=mesh, lane_axis=lane_axis,
+                chunk_bits=sh.chunk_bits, tile=exits_tile,
+                interpret=interpret, mesh=mesh, lane_axis=lane_axis,
             )
         else:
             decode_exits = D.make_decode_exits(
@@ -337,12 +373,28 @@ def _build_program(shape: PlanShape, sync: str, backend: str,
         entries = _entries_from(dev, res.exits, permuted)
         out = jnp.zeros((sh.n_units * 64,), jnp.int32)
         if backend == "pallas":
-            _, out = HK.decode_coeffs(
-                dev, entries, out=out, write_base=bases,
-                write_max=write_max, s_max=sh.s_max,
-                min_code_bits=sh.min_code_bits, chunk_bits=sh.chunk_bits,
-                interpret=interpret, mesh=mesh, lane_axis=lane_axis,
-            )
+            from ..kernels.fused import ops as FK
+            if fuse == "full" and FK.store_fusible(sh.n_units, mesh):
+                # fuse="full": the stream+scatter collapses into the
+                # in-kernel store; the gate re-evaluates per trace
+                # context (the mesh is part of the jit key), so sharded
+                # traces of the same program fall back to the stream form
+                prog.store_fused = True
+                _, out = FK.decode_coeffs_full(
+                    dev, entries, out=out, write_base=bases,
+                    write_max=write_max, s_max=sh.s_max,
+                    min_code_bits=sh.min_code_bits,
+                    chunk_bits=sh.chunk_bits, tile=write_tile,
+                    interpret=interpret,
+                )
+            else:
+                _, out = HK.decode_coeffs(
+                    dev, entries, out=out, write_base=bases,
+                    write_max=write_max, s_max=sh.s_max,
+                    min_code_bits=sh.min_code_bits,
+                    chunk_bits=sh.chunk_bits, tile=write_tile,
+                    interpret=interpret, mesh=mesh, lane_axis=lane_axis,
+                )
         else:
             meta = D.chunk_meta(dev)
             _, out = D.decode_span(
@@ -358,25 +410,39 @@ def _build_program(shape: PlanShape, sync: str, backend: str,
     prog.coeffs_fn = _coeffs
 
     if sh.uniform:
-        prog.pixels_fn = _build_pixels_fn(sh, idct_impl, prog)
+        prog.pixels_fn = _build_pixels_fn(sh, idct_impl, prog, fuse=fuse,
+                                          tiles=tiles, backend=backend,
+                                          interpret=interpret)
     return prog
 
 
-def _build_pixels_fn(sh: PlanShape, idct_impl, prog: DecodeProgram):
+def _build_pixels_fn(sh: PlanShape, idct_impl, prog: DecodeProgram,
+                     fuse: str = "none",
+                     tiles: Optional[TileConfig] = None,
+                     backend: str = "jnp",
+                     interpret: Optional[bool] = None):
     """The jitted IDCT/color stage for one shape (``prog`` receives the
     trace counts — the shared program normally, a per-decoder wrapper when
-    a custom ``idct_impl`` bypasses the cache)."""
+    a custom ``idct_impl`` bypasses the cache).
+
+    With ``fuse != "none"`` on the Pallas backend the whole stage is the
+    single fused pixel kernel (``kernels/fused``) and the per-component
+    planes are never materialized (the fn returns ``(None, rgb)``) —
+    that is the HBM saving. The fused kernel engages off-mesh for
+    3-component uniform batches; on a mesh (the unit axis is sharded and
+    MCU tiles straddle shard boundaries) and for grayscale it falls back
+    to the unfused chain, bit-identically.
+    """
     g = sh.geometry
     u_real = sh.n_images * g.n_units
     comp_grid = tuple((g.mcus_y * g.comp_v[ci], g.mcus_x * g.comp_h[ci])
                       for ci in range(g.n_components))
+    if backend == "pallas" and fuse != "none":
+        from ..kernels.fused import ops as FK
+    else:
+        FK = None
 
-    @functools.partial(jax.jit, static_argnums=(3,))
-    def _pixels(pixdev: Dict[str, Array], pix_layout, coeffs: Array,
-                trace_token):
-        prog.pixels_traces += 1
-        del trace_token
-        coeffs = S.shard(coeffs, "units", None)
+    def _pixels_unfused(pixdev, pix_layout, coeffs):
         pixels = idct_impl(coeffs, pixdev["m_matrices"],
                            pixdev["unit_mrow"][:u_real])
         planes = D.assemble_planes(
@@ -388,6 +454,23 @@ def _build_pixels_fn(sh: PlanShape, idct_impl, prog: DecodeProgram):
             g.height, g.width,
         )
         return planes, rgb
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def _pixels(pixdev: Dict[str, Array], pix_layout, coeffs: Array,
+                trace_token):
+        prog.pixels_traces += 1
+        mesh, _ = _lane_mesh_axis(trace_token)
+        coeffs = S.shard(coeffs, "units", None)
+        if FK is not None and mesh is None and FK.pixels_fusible(g):
+            prog.pixels_fused = True
+            rgb = FK.decode_pixels_fused(
+                coeffs, pixdev["m_matrices"], pixdev["unit_mrow"][:u_real],
+                geometry=g, n_images=sh.n_images,
+                tile=tiles.mcu_tile if tiles is not None else None,
+                interpret=interpret,
+            )
+            return None, rgb
+        return _pixels_unfused(pixdev, pix_layout, coeffs)
 
     return _pixels
 
@@ -415,7 +498,8 @@ def _shape_covers(shape: PlanShape, plan: BatchPlan) -> bool:
 
 
 def _quarantine_shape(plan: BatchPlan, own: PlanShape, sync: str,
-                      backend: str, interpret) -> PlanShape:
+                      backend: str, interpret,
+                      fuse: str = "none") -> PlanShape:
     """Shape selection for a batch with quarantined images.
 
     Quarantine removes the damaged images' compressed bits, so the batch's
@@ -427,8 +511,10 @@ def _quarantine_shape(plan: BatchPlan, own: PlanShape, sync: str,
     nothing compiled covers the plan.
     """
     best = None
-    for (shape, s, b, i) in _PROGRAMS.keys():
-        if (s, b, i) != (sync, backend, interpret):
+    # tiles are not part of the match: they derive from the shape via the
+    # memoized autotuner, so a covering shape resolves to its own tiles
+    for (shape, s, b, i, f, _t) in _PROGRAMS.keys():
+        if (s, b, i, f) != (sync, backend, interpret, fuse):
             continue
         if not _shape_covers(shape, plan):
             continue
@@ -455,13 +541,16 @@ class ParallelDecoder:
                  interpret: Optional[bool] = None,
                  bucket: bool = True, ladder_step: float = LADDER_STEP,
                  shape: Optional[PlanShape] = None,
-                 validation: Optional[BatchValidation] = None):
+                 validation: Optional[BatchValidation] = None,
+                 fuse: Optional[str] = None,
+                 tiles: Optional[TileConfig] = None):
         assert sync in ("jacobi", "faithful", "sequential", "specmap")
         check_backend(backend)
         self.sync = sync
         self.backend = backend
         self.interpret = interpret
         self.validation = validation
+        self.fuse = resolve_fuse(fuse, backend)
         # an explicit shape pins the compile bucket from outside — the
         # multi-host consensus path (repro.launch.multihost) hands every
         # process the merged shape so all hosts trace the same program;
@@ -473,7 +562,13 @@ class ParallelDecoder:
                 # quarantined batches borrow an existing compiled bucket
                 # that covers them, so quarantine never mints compile keys
                 shape = _quarantine_shape(plan, shape, sync, backend,
-                                          interpret)
+                                          interpret, self.fuse)
+        # tile selection is per compile bucket; an explicit `tiles` pins it.
+        # autotune_tiles is memoized per bucket, so a quarantine-borrowed
+        # shape resolves to the same tiles its clean siblings compiled with
+        self.tiles = tiles if tiles is not None else (
+            autotune_tiles(shape, backend, self.fuse)
+            if backend == "pallas" else None)
         if (shape.s_max, shape.min_code_bits, shape.n_images) != \
                 (plan.s_max, plan.min_code_bits, plan.n_images):
             plan = consensus_plan(plan, shape)
@@ -482,7 +577,8 @@ class ParallelDecoder:
         self.data = build_plan_data(plan, self.shape)
         self.program = decode_program(self.shape, sync=sync, backend=backend,
                                       interpret=interpret,
-                                      idct_impl=idct_impl)
+                                      idct_impl=idct_impl,
+                                      fuse=self.fuse, tiles=self.tiles)
         # metadata operands live on device for the handle's lifetime; the
         # words buffer intentionally does NOT (each decode call uploads a
         # fresh copy and donates it to the compiled program)
@@ -503,6 +599,78 @@ class ParallelDecoder:
         introspection/benchmark surface, not the hot path."""
         return dict(self._dev_rest, words=jnp.asarray(self.data.words))
 
+    def launch_stats(self) -> Dict[str, object]:
+        """Kernel-launch and HBM-traffic accounting for this decoder's
+        compiled program (benchmark/introspection surface).
+
+        ``pallas_calls`` counts ``pallas_call`` equation sites in the
+        abstract jaxpr of the coefficient pass plus (when uniform) the
+        pixel pass — the per-trace launch-site count, i.e. how many
+        distinct kernels one decode step issues. ``jaxpr_eqns`` is the
+        total equation count over the same jaxprs (pallas bodies count
+        as one) — the proxy for how many XLA kernel launches the
+        unfused stages add between Pallas calls. ``inter_stage_bytes``
+        is the analytic HBM round-trip estimate of
+        :func:`repro.kernels.fused.ops.fuse_traffic` for intermediates
+        the fuse mode eliminates. Tracing is abstract (ShapeDtypeStruct
+        operands, no compile/execute); the program's python-side trace
+        counters are snapshotted and restored around it.
+        """
+        from ..kernels.fused import ops as FK
+
+        def _subjaxprs(v):
+            if hasattr(v, "eqns"):                   # Jaxpr
+                yield v
+            elif hasattr(v, "jaxpr"):                # ClosedJaxpr
+                yield v.jaxpr
+            elif isinstance(v, (tuple, list)):       # e.g. cond branches
+                for item in v:
+                    yield from _subjaxprs(item)
+
+        def _count(jaxpr):
+            calls, eqns = 0, 0
+            for eqn in jaxpr.eqns:
+                eqns += 1
+                if eqn.primitive.name == "pallas_call":
+                    calls += 1
+                    continue  # kernel bodies are one launch, not N ops
+                for v in eqn.params.values():
+                    for sub in _subjaxprs(v):
+                        c, e = _count(sub)
+                        calls, eqns = calls + c, eqns + e
+            return calls, eqns
+
+        def _sds(tree):
+            return jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+        prog = self.program
+        snap = (prog.coeffs_traces, prog.pixels_traces)
+        try:
+            token = S.trace_token()
+            words_sds = jax.ShapeDtypeStruct(self.data.words.shape,
+                                             self.data.words.dtype)
+            jx = jax.make_jaxpr(prog.coeffs_fn, static_argnums=(2,))(
+                words_sds, _sds(self._dev_rest), token)
+            calls, eqns = _count(jx.jaxpr)
+            if self.plan.uniform and prog.pixels_fn is not None:
+                coeffs_sds = jax.ShapeDtypeStruct(
+                    (self.plan.total_units, 64), jnp.int32)
+                jp = jax.make_jaxpr(prog.pixels_fn, static_argnums=(3,))(
+                    _sds(self._pixdev), _sds(self._pix_layout), coeffs_sds,
+                    token)
+                c, e = _count(jp.jaxpr)
+                calls, eqns = calls + c, eqns + e
+        finally:
+            prog.coeffs_traces, prog.pixels_traces = snap
+        traffic = FK.fuse_traffic(self.shape,
+                                  store_fused=prog.store_fused,
+                                  pixels_fused=prog.pixels_fused)
+        return {"pallas_calls": calls, "jaxpr_eqns": eqns,
+                "fuse": self.fuse,
+                "store_fused": prog.store_fused,
+                "pixels_fused": prog.pixels_fused, **traffic}
+
     # -- constructors -------------------------------------------------------
     @classmethod
     def from_bytes(cls, blobs: Sequence[bytes], chunk_bits: int = 1024,
@@ -513,8 +681,15 @@ class ParallelDecoder:
                    balance: str = "none",
                    lanes: Optional[int] = None,
                    bucket: bool = True,
-                   validate: bool = False) -> "ParallelDecoder":
+                   validate: bool = False,
+                   fuse: Optional[str] = None,
+                   tiles: Optional[TileConfig] = None) -> "ParallelDecoder":
         """Parse, plan, and compile a decoder for one batch.
+
+        ``fuse`` selects the Pallas fusion mode ("none" | "post" | "full",
+        module docstring); ``tiles`` pins an explicit
+        :class:`repro.kernels.autotune.TileConfig` instead of the
+        autotuned/default one. Both are bit-identity-preserving knobs.
 
         ``balance`` selects the plan-time lane partitioner
         (:func:`repro.dist.plan.balance_lanes`): ``"roundrobin"`` or
@@ -561,7 +736,8 @@ class ParallelDecoder:
             n_lanes = int(lanes) if lanes is not None else jax.device_count()
             plan = DP.balance_lanes(plan, n_lanes, balance)
         return cls(plan, sync=sync, idct_impl=idct_impl, backend=backend,
-                   interpret=interpret, bucket=bucket, validation=validation)
+                   interpret=interpret, bucket=bucket, validation=validation,
+                   fuse=fuse, tiles=tiles)
 
     # -- execution ------------------------------------------------------------
     def coefficients(self) -> DecodeOutput:
@@ -647,6 +823,7 @@ def decode_batch(
     balance: str = "none",
     bucket: bool = True,
     validate: bool = False,
+    fuse: Optional[str] = None,
 ) -> DecodeOutput:
     """One-shot convenience wrapper (builds the plan + compiles + decodes).
 
@@ -664,13 +841,19 @@ def decode_batch(
 
     ``bucket`` pads the plan to ladder capacities so repeated calls with
     similar-sized batches reuse the module-level compiled-program cache.
+
+    ``fuse`` ("none" | "post" | "full", Pallas backend only) selects how
+    much of the post-entropy pipeline runs as a single fused kernel; the
+    default resolves per backend (see ``repro.kernels.backend``). Fused
+    decodes skip materializing the per-component planes
+    (``DecodeOutput.planes is None``) — that is the saved HBM traffic.
     """
     dec = ParallelDecoder.from_bytes(
         blobs, chunk_bits=chunk_bits, seq_chunks=seq_chunks, sync=sync,
         backend=backend, use_kernels=use_kernels, interpret=interpret,
         balance=balance,
         lanes=(mesh.devices.size if mesh is not None else None),
-        bucket=bucket, validate=validate,
+        bucket=bucket, validate=validate, fuse=fuse,
     )
     if mesh is None:
         return dec.decode(emit=emit)

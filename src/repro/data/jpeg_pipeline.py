@@ -69,13 +69,17 @@ class JpegVisionPipeline:
                  use_kernels: bool = False, backend: Optional[str] = None,
                  seed: int = 0, mesh=None, balance: str = "none",
                  decoder_cache_size: int = 16, bucket: bool = True,
-                 sync_stats: bool = False, validate: bool = False):
+                 sync_stats: bool = False, validate: bool = False,
+                 fuse: Optional[str] = None):
         self.patch = patch
         self.embed_dim = embed_dim
         self.chunk_bits = chunk_bits
         self.sync = sync
         self.use_kernels = use_kernels
         self.backend = backend
+        # fuse ("none"|"post"|"full", Pallas only) selects the fused decode
+        # megakernel path; None resolves per backend (repro.kernels.backend)
+        self.fuse = fuse
         # validate=True makes the stage resilient: damaged blobs are
         # classified (never raised), rejected images decode as inert gray
         # lanes, and per-batch stats carry a per-image status array plus
@@ -120,6 +124,11 @@ class JpegVisionPipeline:
         self._warm_ms: List[float] = []
         self._buckets: Dict[str, int] = {}
         self._last: Optional[JpegPipelineStats] = None
+        # launch accounting of the most recent decoder's program, cached
+        # per (program, fuse) — launch_stats() retraces abstractly
+        self._last_dec: Optional[ParallelDecoder] = None
+        self._launch_key = None
+        self._launch: Dict = {}
         # resilience counters (advance only under validate=True)
         self._images_ok = 0
         self._images_recovered = 0
@@ -148,7 +157,7 @@ class JpegVisionPipeline:
                 balance=self.balance,
                 lanes=(self.mesh.devices.size
                        if self.mesh is not None else None),
-                bucket=self.bucket, validate=self.validate)
+                bucket=self.bucket, validate=self.validate, fuse=self.fuse)
             if self._decoder_cache_size > 0:
                 self._decoders[key] = dec
                 while len(self._decoders) > self._decoder_cache_size:
@@ -161,6 +170,7 @@ class JpegVisionPipeline:
         """(B, n_patches, embed_dim) patch tokens + stats."""
         t0 = time.perf_counter()
         dec = self._decoder(blobs)
+        self._last_dec = dec
         compiles_before = dec.program.compiles
         if self.mesh is not None:
             out = dec.decode_on(self.mesh, emit="rgb")
@@ -237,6 +247,13 @@ class JpegVisionPipeline:
         last = self._last
         from ..launch.multihost import process_info  # lazy: launch uses us
         info = process_info()
+        dec = self._last_dec
+        if dec is not None:
+            key = (id(dec.program), dec.fuse)
+            if self._launch_key != key:
+                self._launch = dec.launch_stats()
+                self._launch_key = key
+        launch = self._launch
         return {
             "batches": self._batches,
             "compile_count": self._compiles,
@@ -252,6 +269,14 @@ class JpegVisionPipeline:
             "images_ok": self._images_ok,
             "images_recovered": self._images_recovered,
             "images_rejected": self._images_rejected,
+            # fusion + kernel-launch accounting of the active program
+            # (ParallelDecoder.launch_stats; empty-dict defaults before
+            # the first batch): launch-site counts per decode step and
+            # the analytic inter-stage HBM bytes the fuse mode removes
+            "fuse": launch.get("fuse", dec.fuse if dec else "none"),
+            "kernel_launches": launch.get("pallas_calls", 0),
+            "jaxpr_eqns": launch.get("jaxpr_eqns", 0),
+            "inter_stage_hbm_bytes": launch.get("inter_stage_bytes", 0),
             "process_id": info.process_id,
             "process_count": info.num_processes,
         }

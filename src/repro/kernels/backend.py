@@ -1,6 +1,6 @@
 """Shared kernel-backend selection for every Pallas wrapper.
 
-Two orthogonal knobs, used across ``kernels/`` and threaded through the
+Three orthogonal knobs, used across ``kernels/`` and threaded through the
 decoder API (``core/api.py``):
 
 * ``backend`` — which implementation family executes the hot path:
@@ -9,6 +9,17 @@ decoder API (``core/api.py``):
   exactly the bug this module exists to prevent (``use_kernels=True``
   historically swapped only the IDCT and dropped the Huffman kernel on
   the floor).
+
+* ``fuse`` — how aggressively the Pallas path fuses decode stages
+  (``kernels/fused``): ``"none"`` keeps the historical one-kernel-per-
+  stage layout, ``"post"`` fuses the post-entropy chain (dequant +
+  de-zigzag + IDCT + chroma upsample + color convert) into a single
+  launch, and ``"full"`` additionally collapses the write pass's
+  ``(C, s_max)`` stream + bulk scatter into an in-kernel coefficient
+  store wherever that is provably race-free. The jnp backend has no
+  kernels to fuse, so it only accepts ``"none"``. Resolution order:
+  explicit argument > ``REPRO_PALLAS_FUSE`` env var > ``"post"`` (the
+  autotuned default for the Pallas backend).
 
 * ``interpret`` — whether a Pallas call runs compiled (Mosaic on TPU,
   Triton on GPU) or through the interpreter. The wrappers used to
@@ -23,13 +34,16 @@ decoder API (``core/api.py``):
 from __future__ import annotations
 
 import os
+import warnings
 from typing import Optional
 
 import jax
 
 BACKENDS = ("jnp", "pallas")
+FUSE_MODES = ("none", "post", "full")
 
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+FUSE_ENV = "REPRO_PALLAS_FUSE"
 
 
 def check_backend(backend: str) -> str:
@@ -43,6 +57,13 @@ def check_backend(backend: str) -> str:
 
 def resolve_backend(backend: Optional[str], use_kernels: bool = False) -> str:
     """Map the (backend, legacy use_kernels) pair to a validated backend."""
+    if use_kernels:
+        # the legacy boolean predates both the backend knob and the fuse
+        # knob; it can only ever say "pallas, however the defaults fall"
+        warnings.warn(
+            "use_kernels= is deprecated; pass backend=\"pallas\" (and "
+            "optionally fuse=\"none\"|\"post\"|\"full\") instead",
+            DeprecationWarning, stacklevel=3)
     if backend is None:
         return "pallas" if use_kernels else "jnp"
     backend = check_backend(backend)
@@ -53,6 +74,36 @@ def resolve_backend(backend: Optional[str], use_kernels: bool = False) -> str:
             f"one or the other"
         )
     return backend
+
+
+def check_fuse(fuse: str, backend: str = "pallas") -> str:
+    """Validate a fuse-mode name against a backend; raise on junk."""
+    if fuse not in FUSE_MODES:
+        raise ValueError(
+            f"unknown fuse mode {fuse!r}; expected one of {FUSE_MODES}"
+        )
+    if backend != "pallas" and fuse != "none":
+        raise ValueError(
+            f"fuse={fuse!r} requires backend=\"pallas\"; the {backend!r} "
+            f"backend has no kernels to fuse (use fuse=\"none\")"
+        )
+    return fuse
+
+
+def resolve_fuse(fuse: Optional[str], backend: str) -> str:
+    """Resolve the effective fuse mode: argument > env > per-backend default.
+
+    The Pallas default is ``"post"`` — the post-entropy megakernel is
+    bit-identical to the unfused chain and strictly cheaper in launches
+    and inter-stage HBM traffic, so it is the autotuner's standing pick;
+    ``"full"`` stays opt-in because its in-kernel store only engages
+    off-mesh (it falls back to the stream form elsewhere).
+    """
+    if fuse is None:
+        if backend != "pallas":
+            return "none"
+        fuse = os.environ.get(FUSE_ENV) or "post"
+    return check_fuse(fuse, backend)
 
 
 def default_interpret(interpret: Optional[bool] = None) -> bool:

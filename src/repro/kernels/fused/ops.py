@@ -1,0 +1,143 @@
+"""Integration wrappers for the fused decode path (``fuse="post"|"full"``).
+
+Two fusions, each with an explicit, machine-checkable eligibility gate
+and a bit-identical fallback:
+
+* :func:`decode_pixels_fused` — the post-entropy megakernel
+  (``pixels.fused_pixels_pallas``): one launch from coefficient rows to
+  RGB MCU blocks, plus the pure-layout reshape/crop into (B, H, W, 3)
+  images. Eligible for uniform 3-component batches
+  (:func:`pixels_fusible`); grayscale and mixed-geometry batches keep
+  the unfused chain.
+
+* :func:`decode_coeffs_full` — the write pass with the in-kernel
+  coefficient store (``store.decode_coeffs_store_pallas``), the
+  ``fuse="full"`` half. Eligible off-mesh when the dense coefficient
+  buffer fits the VMEM budget (:func:`store_fusible`); the stream+scatter
+  form remains the fallback and produces bit-identical coefficients.
+
+:func:`fuse_traffic` is the analytic inter-stage HBM accounting the
+benchmarks and ``decode_stats()`` report: bytes that round-trip through
+HBM *between* kernels per decode step, i.e. exactly what fusion deletes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from ...core.state import DecodeState
+from ..backend import default_interpret
+from .pixels import fused_pixels_pallas
+from .store import decode_coeffs_store_pallas
+
+#: The in-kernel store keeps the whole dense coefficient buffer VMEM-
+#: resident per grid step; beyond this budget (int32 bytes, leaving room
+#: for the LUTs and word windows in the same ~16 MiB) the stream form is
+#: the right call anyway — the scatter cost amortizes.
+FULL_STORE_VMEM_BYTES = 4 << 20
+
+
+def pixels_fusible(geometry) -> bool:
+    """Whether the fused pixel kernel covers this batch's layout: a
+    uniform 3-component geometry (grayscale keeps the — already cheap —
+    unfused single-plane path)."""
+    return (geometry is not None and geometry.n_components == 3
+            and len(geometry.comp_h) == 3)
+
+
+def store_fusible(n_units: int, mesh=None) -> bool:
+    """Whether the in-kernel coefficient store may replace the stream
+    form: off-mesh (a lane shard cannot own the whole output buffer) and
+    inside the VMEM budget."""
+    return mesh is None and n_units * 64 * 4 <= FULL_STORE_VMEM_BYTES
+
+
+def decode_pixels_fused(
+    coeffs: jnp.ndarray,       # (B*g.n_units, 64) zig-zag, absolute DC
+    m_matrices: jnp.ndarray,
+    unit_mrow: jnp.ndarray,
+    *,
+    geometry,
+    n_images: int,
+    tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused pixel stage for a uniform batch: (B, H, W, 3) uint8 RGB.
+
+    The unit axis is already MCU-major (plan order), so the kernel's MCU
+    tiles are contiguous row ranges; everything after the kernel is pure
+    layout (reshape/transpose/crop), no arithmetic — parity with the
+    unfused chain is decided inside the kernel.
+    """
+    g = geometry
+    if not pixels_fusible(g):
+        raise ValueError(
+            f"fused pixel kernel needs a uniform 3-component geometry; "
+            f"got {g!r} (the decoder gates this via pixels_fusible)")
+    blocks = fused_pixels_pallas(
+        coeffs, m_matrices, unit_mrow,
+        comp_h=tuple(g.comp_h), comp_v=tuple(g.comp_v),
+        h_max=g.h_max, v_max=g.v_max, upm=g.units_per_mcu,
+        tile=tile, interpret=default_interpret(interpret),
+    )
+    mcu_h, mcu_w = 8 * g.v_max, 8 * g.h_max
+    img = blocks.reshape(n_images, g.mcus_y, g.mcus_x, 3, mcu_h, mcu_w)
+    img = img.transpose(0, 3, 1, 4, 2, 5).reshape(
+        n_images, 3, g.mcus_y * mcu_h, g.mcus_x * mcu_w)
+    return img[:, :, :g.height, :g.width].transpose(0, 2, 3, 1).astype(
+        jnp.uint8)
+
+
+def decode_coeffs_full(
+    dev: Dict[str, jnp.ndarray],
+    entry: DecodeState,
+    *,
+    out: jnp.ndarray,          # (total_units*64,) int32 (shape carrier)
+    write_base: jnp.ndarray,
+    write_max: jnp.ndarray,
+    s_max: int,
+    min_code_bits: int,
+    chunk_bits: int,
+    tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[DecodeState, jnp.ndarray]:
+    """Drop-in for ``huffman.ops.decode_coeffs`` with the in-kernel store
+    (off-mesh only — the caller gates via :func:`store_fusible`).
+
+    ``out`` carries the buffer shape; the kernel zero-initializes its own
+    output, so the incoming zeros are never read.
+    """
+    from ..huffman.ops import _lane_meta
+
+    (lut_rows, word_base, start), limit, upm = _lane_meta(dev, None)
+    (p, u, z, n), coef = decode_coeffs_store_pallas(
+        dev["words"], dev["luts"], lut_rows, word_base, start,
+        entry.p, entry.u, entry.z, limit, upm, write_base, write_max,
+        n_coef=out.shape[0], s_max=s_max, min_code_bits=min_code_bits,
+        chunk_words=chunk_bits // 32, tile=tile,
+        interpret=default_interpret(interpret),
+    )
+    return DecodeState(p, u, z, n), coef
+
+
+def fuse_traffic(shape, *, store_fused: bool, pixels_fused: bool) -> Dict:
+    """Analytic inter-stage HBM bytes per decode step for one program.
+
+    * ``stream_bytes`` — the write pass's (C, s_max) pos/val spill (one
+      write + one read each): gone when the in-kernel store engages.
+    * ``pixel_bytes`` — the unfused pixel chain's intermediates (the
+      per-unit pixel tile out of the IDCT kernel and the assembled YCbCr
+      planes into the color stage, each written then read): gone when
+      the post-entropy megakernel engages.
+    """
+    stream = 0 if store_fused else 2 * 2 * shape.n_chunks * shape.s_max * 4
+    pixel = 0
+    if not pixels_fused and shape.uniform and shape.geometry is not None:
+        unit_px = shape.n_images * shape.geometry.n_units * 64 * 4
+        pixel = 2 * 2 * unit_px  # pixel tile + planes, written then read
+    return {
+        "stream_bytes": stream,
+        "pixel_bytes": pixel,
+        "inter_stage_bytes": stream + pixel,
+    }

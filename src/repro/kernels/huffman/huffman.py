@@ -224,7 +224,9 @@ def _check_lane_tiling(c: int, pad: int, tile: int) -> None:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("s_max", "min_code_bits", "chunk_words", "interpret")
+    jax.jit,
+    static_argnames=("s_max", "min_code_bits", "chunk_words", "tile",
+                     "interpret"),
 )
 def decode_exits_pallas(
     words: jnp.ndarray,        # (W_total,) uint32 global word buffer
@@ -241,11 +243,12 @@ def decode_exits_pallas(
     s_max: int,
     min_code_bits: int,
     chunk_words: int,
+    tile: int = None,          # lane-tile cap override (autotune)
     interpret: bool,
 ):
     """Returns exit (p, u, z, n); p is segment-relative like the input."""
     c = entry_p.shape[0]
-    tile = _tile_for(c, TILE_C)
+    tile = _tile_for(c, tile if tile is not None else TILE_C)
     local_words, meta, upm2, pad, w = _prep_lanes(
         words, word_base, chunk_start, entry_p, entry_u, entry_z, limit, upm,
         chunk_words, tile,
@@ -282,7 +285,9 @@ def decode_exits_pallas(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("s_max", "min_code_bits", "chunk_words", "interpret")
+    jax.jit,
+    static_argnames=("s_max", "min_code_bits", "chunk_words", "tile",
+                     "interpret"),
 )
 def decode_coeffs_pallas(
     words: jnp.ndarray,
@@ -299,6 +304,7 @@ def decode_coeffs_pallas(
     s_max: int,
     min_code_bits: int,
     chunk_words: int,
+    tile: int = None,          # lane-tile cap override (autotune)
     interpret: bool,
 ):
     """Write pass: exits plus per-symbol (local offset, coefficient) streams.
@@ -306,9 +312,14 @@ def decode_coeffs_pallas(
     ``pos[c, s]`` is the zig-zag offset (relative to the lane's write base)
     written by symbol step ``s`` of lane ``c``, or -1 when the step decoded
     nothing (inactive past the chunk end, or garbage phase).
+
+    The lane-tile cap is no longer hardcoded to ``WRITE_TILE_C``: the
+    autotuner (``kernels/autotune``) routes a per-bucket cap through
+    ``tile`` and :func:`_check_lane_tiling` rejects — loudly — any tile
+    that fails to divide the padded lane capacity.
     """
     c = entry_p.shape[0]
-    tile = _tile_for(c, WRITE_TILE_C)
+    tile = _tile_for(c, tile if tile is not None else WRITE_TILE_C)
     local_words, meta, upm2, pad, w = _prep_lanes(
         words, word_base, chunk_start, entry_p, entry_u, entry_z, limit, upm,
         chunk_words, tile,

@@ -116,13 +116,14 @@ def decode_exits(
     s_max: int,
     min_code_bits: int,
     chunk_bits: int,
+    tile: Optional[int] = None,
     interpret: Optional[bool] = None,
     mesh=None,
     lane_axis: Optional[str] = None,
 ) -> DecodeState:
     """Exit states for every lane (or the `idx` subset) — sync-phase decode."""
     kw = dict(s_max=s_max, min_code_bits=min_code_bits,
-              chunk_words=chunk_bits // 32,
+              chunk_words=chunk_bits // 32, tile=tile,
               interpret=default_interpret(interpret))
     (p, u, z, n), c = _run(
         decode_exits_pallas, dev, entry, idx, kw, mesh, lane_axis,
@@ -143,6 +144,7 @@ def decode_coeffs(
     s_max: int,
     min_code_bits: int,
     chunk_bits: int,
+    tile: Optional[int] = None,
     interpret: Optional[bool] = None,
     mesh=None,
     lane_axis: Optional[str] = None,
@@ -155,7 +157,7 @@ def decode_coeffs(
     per-symbol scatter of the jnp path.
     """
     kw = dict(s_max=s_max, min_code_bits=min_code_bits,
-              chunk_words=chunk_bits // 32,
+              chunk_words=chunk_bits // 32, tile=tile,
               interpret=default_interpret(interpret))
     ((p, u, z, n), pos, val), c = _run(
         decode_coeffs_pallas, dev, entry, None, kw, mesh, lane_axis,
@@ -183,6 +185,7 @@ def make_decode_exits(
     s_max: int,
     min_code_bits: int,
     chunk_bits: int,
+    tile: Optional[int] = None,
     interpret: Optional[bool] = None,
     mesh=None,
     lane_axis: Optional[str] = None,
@@ -192,7 +195,7 @@ def make_decode_exits(
     def fn(dev, entry, idx=None):
         return decode_exits(
             dev, entry, idx, s_max=s_max, min_code_bits=min_code_bits,
-            chunk_bits=chunk_bits, interpret=interpret, mesh=mesh,
-            lane_axis=lane_axis,
+            chunk_bits=chunk_bits, tile=tile, interpret=interpret,
+            mesh=mesh, lane_axis=lane_axis,
         )
     return fn

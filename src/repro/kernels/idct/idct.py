@@ -45,40 +45,42 @@ def _kernel(x_ref, rows_ref, m2_ref, o_ref, *, nq: int):
     o_ref[...] = jnp.clip(jnp.round(acc + 128.0), 0.0, 255.0).reshape(t, 64)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def fused_idct(
     coeffs: jnp.ndarray,      # (U, 64) int32/float zig-zag coefficients
     m_matrices: jnp.ndarray,  # (NQ, 64, 64) float32 folded operators
     unit_mrow: jnp.ndarray,   # (U,) int32
+    tile: int = None,         # unit-tile override (autotune)
     interpret: bool = None,
 ) -> jnp.ndarray:
     interpret = default_interpret(interpret)
+    tile_u = tile if tile is not None else TILE_U
     u, width = coeffs.shape
-    if width != 64 or TILE_U % 2:
+    if width != 64 or tile_u % 2 or tile_u <= 0:
         # the unit-pairing reshape below needs 64 lanes per unit and an
         # even tile — kernel-tiling contract twin (analysis/kernel_check)
         raise ValueError(
-            f"fused_idct needs (U, 64) coefficients and an even TILE_U; "
-            f"got width {width}, TILE_U {TILE_U}")
+            f"fused_idct needs (U, 64) coefficients and a positive even "
+            f"unit tile; got width {width}, tile {tile_u}")
     nq = m_matrices.shape[0]
     # block-diagonalize each M for the unit-pairing trick
     eye2 = jnp.eye(2, dtype=m_matrices.dtype)
     m2 = jnp.einsum("ab,qij->qaibj", eye2, m_matrices).reshape(nq, 128, 128)
 
-    pad = (-u) % TILE_U
+    pad = (-u) % tile_u
     x = jnp.pad(coeffs.astype(jnp.float32), ((0, pad), (0, 0)))
     rows = jnp.pad(unit_mrow.astype(jnp.int32), (0, pad))[:, None]
 
-    grid = (x.shape[0] // TILE_U,)
+    grid = (x.shape[0] // tile_u,)
     out = pl.pallas_call(
         functools.partial(_kernel, nq=nq),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_U, 64), lambda i: (i, 0)),
-            pl.BlockSpec((TILE_U, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_u, 64), lambda i: (i, 0)),
+            pl.BlockSpec((tile_u, 1), lambda i: (i, 0)),
             pl.BlockSpec((nq, 128, 128), lambda i: (0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_U, 64), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile_u, 64), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], 64), jnp.float32),
         interpret=interpret,
     )(x, rows, m2)

@@ -13,8 +13,9 @@ from .ref import fused_idct_ref  # noqa: F401  (re-exported oracle)
 
 def idct_units(coeffs: jnp.ndarray, m_matrices: jnp.ndarray,
                unit_mrow: jnp.ndarray, *,
+               tile: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused dequant+dezigzag+IDCT; compiled Pallas on TPU/GPU, interpret
     mode on CPU (see repro.kernels.backend for the override order)."""
-    return fused_idct(coeffs, m_matrices, unit_mrow,
+    return fused_idct(coeffs, m_matrices, unit_mrow, tile=tile,
                       interpret=default_interpret(interpret))

@@ -198,12 +198,20 @@ class TestMultiDevice:
             # the pixel stage (Pallas fused IDCT on "units"-sharded
             # coefficients) must also survive the mesh
             rgb = decode_batch(blobs, chunk_bits=256, emit="rgb",
-                               mesh=mesh, backend="pallas").rgb
+                               mesh=mesh, backend="pallas", fuse="none").rgb
             for bi in (0, 3):
                 ref = cr.decode_baseline(blobs[bi])
                 err = np.abs(np.asarray(rgb[bi]).astype(int)
                              - ref.astype(int)).max()
                 assert err <= 1, err
+            # fused decode on-mesh: the megakernel/in-kernel store gates
+            # detect the mesh at trace time and fall back — exactly
+            # bit-identical to fuse="none" on the same mesh
+            for fuse in ("post", "full"):
+                got = decode_batch(blobs, chunk_bits=256, emit="rgb",
+                                   mesh=mesh, backend="pallas",
+                                   fuse=fuse).rgb
+                assert np.array_equal(np.asarray(got), np.asarray(rgb)), fuse
             print("PALLAS_SHARDED", n_dev)
         """)
         assert "PALLAS_SHARDED 8" in out

@@ -240,23 +240,34 @@ class TestBackendKnob:
 
     def test_use_kernels_selects_pallas_end_to_end(self):
         """Regression: use_kernels=True used to swap only the IDCT and
-        silently drop the Huffman kernel."""
+        silently drop the Huffman kernel. The legacy flag still works but
+        is deprecated — it must warn, pointing at backend=/fuse=."""
         blobs, exp = _mixed_quality_batch()
-        dec = ParallelDecoder.from_bytes(
-            blobs, chunk_bits=160, use_kernels=True, interpret=True)
+        with pytest.warns(DeprecationWarning, match="backend="):
+            dec = ParallelDecoder.from_bytes(
+                blobs, chunk_bits=160, use_kernels=True, interpret=True)
         assert dec.backend == "pallas"
         assert np.array_equal(np.asarray(dec.coefficients().coeffs), exp)
 
+    def test_use_kernels_false_does_not_warn(self):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            assert KB.resolve_backend(None, use_kernels=False) == "jnp"
+
     def test_resolve_backend(self):
         assert KB.resolve_backend(None) == "jnp"
-        assert KB.resolve_backend(None, use_kernels=True) == "pallas"
+        with pytest.warns(DeprecationWarning, match="backend="):
+            assert KB.resolve_backend(None, use_kernels=True) == "pallas"
         assert KB.resolve_backend("pallas") == "pallas"
-        assert KB.resolve_backend("pallas", use_kernels=True) == "pallas"
+        with pytest.warns(DeprecationWarning, match="backend="):
+            assert KB.resolve_backend("pallas", use_kernels=True) == "pallas"
         with pytest.raises(ValueError):
             KB.resolve_backend("mosaic")
         # conflicting legacy flag + explicit backend must not silently
-        # drop the kernels
-        with pytest.raises(ValueError, match="conflicting backend"):
+        # drop the kernels (still warns on the legacy flag before raising)
+        with pytest.warns(DeprecationWarning), \
+                pytest.raises(ValueError, match="conflicting backend"):
             KB.resolve_backend("jnp", use_kernels=True)
 
     def test_interpret_resolution_order(self, monkeypatch):
@@ -294,3 +305,142 @@ class TestColorKernel:
         diff = np.abs(np.asarray(got).astype(int) - np.asarray(exp).astype(int))
         assert diff.max() <= 1
         assert (diff > 0).mean() < 0.01
+
+
+class TestFuseParityMatrix:
+    """Acceptance: every (schedule, fuse) cell of the Pallas backend is
+    bit-identical — coefficients AND pixels — to backend="jnp" on a
+    mixed-quality batch (the 8-device mesh variant of this matrix lives
+    in tests/test_distribution.py)."""
+
+    def _decode(self, blobs, sync, backend, fuse=None, **kw):
+        dec = ParallelDecoder.from_bytes(
+            blobs, chunk_bits=160, sync=sync, backend=backend, fuse=fuse,
+            interpret=True, **kw)
+        out = dec.decode("rgb")
+        assert out.converged
+        return dec, out
+
+    @pytest.mark.parametrize("fuse", ["none", "post", "full"])
+    @pytest.mark.parametrize(
+        "sync", ["jacobi", "faithful", "specmap", "sequential"])
+    def test_fused_bit_identical_to_jnp(self, sync, fuse):
+        blobs, exp_coeffs = _mixed_quality_batch()
+        _, ref = self._decode(blobs, sync, "jnp")
+        dec, got = self._decode(blobs, sync, "pallas", fuse=fuse)
+        assert np.array_equal(np.asarray(got.coeffs), exp_coeffs)
+        assert np.array_equal(np.asarray(got.rgb), np.asarray(ref.rgb))
+        if fuse == "post":
+            # the megakernel replaced the unfused pixel chain: no
+            # intermediate planes survive
+            assert dec.program.pixels_fused
+            assert got.planes is None
+        if fuse == "full":
+            # tiny batch, off-mesh: the in-kernel store must engage
+            assert dec.program.store_fused
+
+    def test_fused_bit_identical_unbucketed(self):
+        """The bucket=False (exact-shape) cell of the matrix."""
+        blobs, _ = _mixed_quality_batch()
+        _, ref = self._decode(blobs, "jacobi", "jnp", bucket=False)
+        _, got = self._decode(blobs, "jacobi", "pallas", fuse="post",
+                              bucket=False)
+        assert np.array_equal(np.asarray(got.rgb), np.asarray(ref.rgb))
+
+    def test_fuse_requires_pallas_backend(self):
+        blobs, _ = _mixed_quality_batch()
+        with pytest.raises(ValueError, match="fuse"):
+            ParallelDecoder.from_bytes(blobs, backend="jnp", fuse="post")
+        with pytest.raises(ValueError, match="unknown fuse"):
+            ParallelDecoder.from_bytes(blobs, backend="pallas",
+                                       fuse="mega")
+
+
+class TestAutotune:
+    """The block-size autotuner: resolution order, loud validation, disk
+    persistence, and the zero-recompile guarantee (tiles ride the
+    DecodeProgram cache key, so a warm bucket never re-tunes/retraces)."""
+
+    def _batch(self, seeds, quality=85):
+        return [cr.encode_baseline(synth_image(48, 64, seed=s),
+                                   quality=quality,
+                                   subsampling="4:2:0").jpeg_bytes
+                for s in seeds]
+
+    def test_warm_bucket_zero_recompiles(self, monkeypatch, tmp_path):
+        from repro.core import clear_decode_programs, decode_programs
+        from repro.kernels import autotune as AT
+
+        monkeypatch.delenv(AT.TILES_ENV, raising=False)
+        monkeypatch.setenv(AT.TABLE_ENV, str(tmp_path / "tiles.json"))
+        clear_decode_programs()
+        AT.clear_tile_cache()
+        for seeds in ((0, 1, 2), (7, 8, 9)):   # distinct, same bucket
+            dec = ParallelDecoder.from_bytes(
+                self._batch(seeds), chunk_bits=160, backend="pallas",
+                fuse="post", interpret=True)
+            assert dec.tiles is not None
+            dec.decode("rgb")
+        progs = [p for p in decode_programs() if p.backend == "pallas"]
+        assert len(progs) == 1               # one bucket, one program
+        assert progs[0].coeffs_traces == 1   # second batch: pure cache hit
+        assert progs[0].pixels_traces == 1
+        assert progs[0].tiles == AT.DEFAULT_TILES  # no measure => defaults
+
+    def test_env_override_wins(self, monkeypatch):
+        from repro.kernels import autotune as AT
+
+        monkeypatch.setenv(AT.TILES_ENV, "exits=512,write=64,mcu=16")
+        AT.clear_tile_cache()
+        cfg = AT.autotune_tiles("any-bucket", "pallas", "post",
+                                measure=lambda c: 0.0, kind="testdev")
+        # override beats memo, table, and the measured search
+        assert (cfg.exits_tile, cfg.write_tile, cfg.mcu_tile) == (512, 64, 16)
+        assert cfg.unit_tile == AT.DEFAULT_TILES.unit_tile  # unnamed: default
+
+    def test_bad_override_fails_loudly(self, monkeypatch):
+        from repro.kernels import autotune as AT
+
+        with pytest.raises(ValueError, match="multiple of 8"):
+            AT.parse_tile_override("exits=7")
+        with pytest.raises(ValueError, match="unknown"):
+            AT.parse_tile_override("bogus=64")
+        with pytest.raises(ValueError, match="key=value"):
+            AT.parse_tile_override("128")
+        with pytest.raises(ValueError, match="not an int"):
+            AT.parse_tile_override("write=fast")
+        with pytest.raises(ValueError, match="out of range"):
+            AT.parse_tile_override("unit=0")
+        # the end-to-end path surfaces the same error, not a fallback
+        monkeypatch.setenv(AT.TILES_ENV, "exits=7")
+        AT.clear_tile_cache()
+        with pytest.raises(ValueError, match="multiple of 8"):
+            ParallelDecoder.from_bytes(self._batch((0,)), backend="pallas",
+                                       interpret=True)
+
+    def test_measured_search_persists_to_table(self, tmp_path, monkeypatch):
+        from repro.kernels import autotune as AT
+
+        monkeypatch.delenv(AT.TILES_ENV, raising=False)
+        monkeypatch.setenv(AT.TABLE_ENV, str(tmp_path / "tiles.json"))
+        AT.clear_tile_cache()
+        calls = []
+
+        def measure(cfg):
+            calls.append(cfg)
+            return 0.0 if cfg.write_tile == 64 else 1.0
+
+        won = AT.autotune_tiles("bucket-X", "pallas", "none",
+                                measure=measure, kind="testdev")
+        assert won.write_tile == 64
+        assert len(calls) == len(AT.candidate_configs())
+        # a fresh process (cleared memo) resolves the winner from disk
+        # without re-measuring
+        AT.clear_tile_cache()
+        again = AT.autotune_tiles("bucket-X", "pallas", "none",
+                                  kind="testdev")
+        assert again == won
+        # distinct tune keys don't collide
+        other = AT.autotune_tiles("bucket-Y", "pallas", "none",
+                                  kind="testdev")
+        assert other == AT.DEFAULT_TILES
