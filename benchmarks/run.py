@@ -26,7 +26,10 @@ import sys
 #: Schema 2: one line per (backend, fuse) variant when the "backends"
 #: suite ran (variant lines carry decode_us + launch accounting), plus
 #: the global line (backend = the env default) with the health metrics.
-TRAJECTORY_SCHEMA = 2
+#: Schema 3: the global line gains the "serve" suite's headline metrics
+#: (serve_ips, serve_overlap, serve_p50_ms/p99_ms, deadline misses,
+#: batch occupancy) when that suite ran.
+TRAJECTORY_SCHEMA = 3
 
 
 def _git_sha() -> str:
@@ -64,6 +67,14 @@ def trajectory_metrics(rows) -> dict:
         elif r["name"].startswith("skew/") and "imbalance" in d:
             m[f"imbalance_{r['name'].split('/', 1)[1]}"] = \
                 float(d["imbalance"])
+        elif r["name"] == "serve/drain":
+            m["serve_ips"] = float(d["ips"])
+            m["serve_overlap"] = float(d["overlap"])
+            m["serve_occupancy"] = float(d["occupancy"])
+        elif r["name"] == "serve/poisson":
+            m["serve_p50_ms"] = float(d["p50_ms"])
+            m["serve_p99_ms"] = float(d["p99_ms"])
+            m["serve_deadline_misses"] = int(d["deadline_misses"])
     return m
 
 
@@ -115,8 +126,8 @@ def append_trajectory(path: str, rows, suites) -> None:
 
 
 def main() -> None:
-    from . import backends, breakdown, datasets, quality, skew, stream, \
-        subseq_size
+    from . import backends, breakdown, datasets, quality, serve, skew, \
+        stream, subseq_size
     from .common import BENCH_BACKEND, BENCH_SCALE, emit
 
     suites = {
@@ -127,6 +138,7 @@ def main() -> None:
         "backends": backends,     # beyond-paper: jnp vs Pallas kernels
         "skew": skew,             # beyond-paper: lane balancing (skewed corpus)
         "stream": stream,         # beyond-paper: compile-once steady stream
+        "serve": serve,           # beyond-paper: async decode service (SLO)
     }
     wanted = sys.argv[1:] or list(suites)
     all_rows = []

@@ -1,0 +1,172 @@
+"""Beyond-paper: continuous-batching decode service under open-loop load.
+
+The serving front-end (``repro.serve.decode_service``) claims the host
+pipeline cost — per-request parse/validate, batch forming, plan build,
+operand upload — hides behind device decode via stage threads and
+double-buffered donated ``words`` operands. This suite measures that
+claim directly against an in-process baseline, then characterizes SLO
+behavior under Poisson traffic:
+
+* ``serve/raw`` — the *serial* baseline at the same bucket: for each
+  fresh batch, validate + plan + build the decoder + decode + block, one
+  after the other on one thread. This is the service's exact per-batch
+  work with zero overlap — the analogue of ``stream/bucketed``'s warm
+  step, measured here so both sides share one corpus, one bucket, and
+  one process. ``us_per_call`` is warm microseconds per *image*.
+
+* ``serve/drain`` — the same stream submitted to the service as one
+  saturated backlog (open-loop rate 0): the former always has a full
+  batch, so steady-state throughput is the pipelined rate. ``derived``
+  reports ``overlap`` = raw_us / serve_us — the acceptance criterion is
+  that the pipelined service is within ~10% of the raw warm rate
+  (overlap >= ~0.9); on an idle machine the pipeline *wins* (overlap
+  > 1) because host work for batch k+1 hides behind device decode of
+  batch k.
+
+* ``serve/poisson`` — open-loop Poisson arrivals at ~70% of drain
+  capacity with a real SLO: p50/p99 latency, deadline misses, and mean
+  batch occupancy (the continuous-batching health signal — low
+  occupancy at high load means the former is flushing on deadline
+  pressure, not filling batches).
+
+Rows fold into the BENCH_JSON artifact and trajectory line in CI
+(fixed seed, fixed-size corpus: serving behavior is a latency/pipeline
+property, not a perf scale, so BENCH_SCALE does not apply; rows carry
+``corpus=fixed``). The decode honors BENCH_BACKEND.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import BENCH_BACKEND
+
+from repro.core.api import ParallelDecoder, _shape_covers
+from repro.core.bitstream import BatchValidation, build_batch_plan, \
+    plan_shape, validate_blob
+from repro.jpeg import codec_ref as cr
+from repro.jpeg.encoder import synth_frame
+from repro.serve import DecodeService, ServiceConfig, run_open_loop
+
+BATCH = 4
+CHUNK_BITS = 256
+SEQ_CHUNKS = 8
+N_DRAIN = 96          # backlog images for the saturation measurement
+N_POISSON = 48        # open-loop requests for the SLO measurement
+SLO_MS = 250.0
+SEED = 0
+
+
+def serve_blobs(n: int):
+    """Distinct same-geometry blobs (one 32x32 bucket, like stream.py)."""
+    rng = np.random.default_rng(SEED)
+    return [cr.encode_baseline(synth_frame(rng, 32, 32, t=0.13 * i),
+                               quality=80).jpeg_bytes for i in range(n)]
+
+
+def _service(**overrides) -> DecodeService:
+    cfg = ServiceConfig(batch_size=BATCH, chunk_bits=CHUNK_BITS,
+                        seq_chunks=SEQ_CHUNKS, backend=BENCH_BACKEND,
+                        slo_ms=SLO_MS, **overrides)
+    return DecodeService(cfg)
+
+
+def _raw_serial_us(blobs, shapes) -> float:
+    """Warm serial per-image time of the service's own batch work:
+    validate + plan + decoder build + decode + block, on one thread.
+    ``shapes`` seeds the same bucket ladder the service admitted — a
+    batch that no admitted shape covers mints the next rung, exactly as
+    the service's admission does (no pipelining, no batching queue)."""
+    import jax
+    shapes = list(shapes)
+    batches = [blobs[i:i + BATCH] for i in range(0, len(blobs), BATCH)]
+    times = []
+    for bi, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        validation = BatchValidation([validate_blob(b) for b in batch])
+        plan = build_batch_plan(batch, chunk_bits=CHUNK_BITS,
+                                seq_chunks=SEQ_CHUNKS, validation=validation)
+        shape = plan_shape(plan)
+        pin = next((s for s in shapes
+                    if s == shape or _shape_covers(s, plan)), None)
+        if pin is None:
+            pin = shape
+            shapes.append(shape)
+        dec = ParallelDecoder(plan, backend=BENCH_BACKEND, shape=pin,
+                              validation=validation)
+        out = dec.decode(emit="rgb")
+        jax.block_until_ready(out.rgb)
+        if bi > 0:                      # batch 0 may pay residual warmup
+            times.append(time.perf_counter() - t0)
+    return float(np.median(times)) / BATCH * 1e6
+
+
+def run_rows():
+    blobs = serve_blobs(N_DRAIN)
+    rows = []
+
+    # -- saturated service (drain) + the raw serial baseline ---------------
+    svc = _service()
+    svc.prewarm(blobs[:BATCH])          # mint + compile the first rung
+    drain_warm = run_open_loop(svc, blobs, n_requests=N_DRAIN,
+                               rate_ips=0.0, seed=SEED,
+                               deadline_ms=60_000.0)  # mint any drift rungs
+    admitted = list(svc._admitted)
+    svc.reset_stats()
+    drain = run_open_loop(svc, blobs, n_requests=N_DRAIN, rate_ips=0.0,
+                          seed=SEED, deadline_ms=60_000.0)
+    stats = svc.serve_stats()
+    svc.close()
+    serve_us = 1e6 / drain["ips"] if drain["ips"] > 0 else 0.0
+
+    raw_us = _raw_serial_us(blobs, admitted)
+    rows.append({
+        "name": "serve/raw",
+        "us_per_call": raw_us,
+        "derived": f"corpus=fixed;batch={BATCH};chunk_bits={CHUNK_BITS};"
+                   f"bucket={admitted[0].label()}",
+    })
+    overlap = raw_us / serve_us if serve_us > 0 else 0.0
+    rows.append({
+        "name": "serve/drain",
+        "us_per_call": serve_us,
+        "derived": f"corpus=fixed;ips={drain['ips']:.1f};"
+                   f"overlap={overlap:.3f};"
+                   f"occupancy={drain['occupancy_mean']:.2f};"
+                   f"p50_ms={drain['p50_ms']:.2f};"
+                   f"p99_ms={drain['p99_ms']:.2f};"
+                   f"warm_batch_ms={stats['warm_batch_ms']:.2f};"
+                   f"batches={stats['batches']};"
+                   f"buckets={len(stats['buckets'])}",
+    })
+
+    # -- open-loop Poisson at ~70% of drain capacity, against the SLO ------
+    rate = 0.7 * drain["ips"]
+    svc = _service()
+    svc.prewarm(blobs[:BATCH])
+    svc.reset_stats()
+    load = run_open_loop(svc, blobs, n_requests=N_POISSON, rate_ips=rate,
+                         seed=SEED, deadline_ms=SLO_MS)
+    pstats = svc.serve_stats()
+    svc.close()
+    rows.append({
+        "name": "serve/poisson",
+        "us_per_call": load["p50_ms"] * 1e3,
+        "derived": f"corpus=fixed;rate_ips={rate:.1f};"
+                   f"ips={load['ips']:.1f};"
+                   f"p50_ms={load['p50_ms']:.2f};"
+                   f"p99_ms={load['p99_ms']:.2f};"
+                   f"slo_ms={SLO_MS:.0f};"
+                   f"deadline_misses={load['deadline_misses']};"
+                   f"completed={load['completed']};"
+                   f"occupancy={load['occupancy_mean']:.2f};"
+                   f"batches={pstats['batches']}",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    print("name,us_per_call,derived")
+    emit(run_rows())

@@ -7,6 +7,14 @@ Modes (DESIGN.md §9):
   jacobi     : ours (bulk-synchronous self-sync, beyond-paper schedule)
   faithful   : the paper's two-level overflow pattern (Algorithm 3)
   sequential : per-image parallelism only (nvJPEG-hybrid stand-in)
+
+With ``--serve``, requests go through the real continuous-batching async
+service (``repro.serve.DecodeService``) instead of pre-formed batches:
+open-loop Poisson arrivals, a deadline-aware batch former, and
+host/device pipelining — see docs/SERVING.md §Serving front-end.
+
+    PYTHONPATH=src python examples/decode_server.py --serve \
+        --images 64 --rate 200 --slo 250
 """
 import argparse
 import sys
@@ -31,12 +39,26 @@ def main():
     ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
                     help="decode backend (pallas = kernels; compiled on "
                          "TPU/GPU, interpret mode on CPU)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the continuous-batching async service "
+                         "instead of the pre-formed batch modes")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="--serve: micro-batch size the former packs to")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="--serve: Poisson arrival rate in images/sec "
+                         "(0 = submit the whole backlog at once)")
+    ap.add_argument("--slo", type=float, default=250.0,
+                    help="--serve: per-request deadline in ms")
     args = ap.parse_args()
 
     ds = build_dataset(DatasetSpec("serve", args.images, args.width,
                                    args.height, args.quality))
     print(f"dataset: {args.images} x {args.width}x{args.height} "
           f"q{args.quality} = {ds.compressed_mb:.2f} MB compressed")
+
+    if args.serve:
+        serve(ds, args)
+        return
 
     for mode in ("jacobi", "faithful", "sequential"):
         dec = ParallelDecoder.from_bytes(ds.jpeg_bytes,
@@ -45,14 +67,36 @@ def main():
         # warmup/compile
         out = dec.decode(emit="rgb")
         out.rgb.block_until_ready()
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(args.rounds):
             out = dec.decode(emit="rgb")
             out.rgb.block_until_ready()
-        dt = (time.time() - t0) / args.rounds
+        dt = (time.perf_counter() - t0) / args.rounds
         print(f"{mode:10s}: {dt*1e3:7.1f} ms/batch "
               f"{ds.compressed_mb/dt:8.1f} MB/s "
               f"{args.images/dt:7.1f} img/s (rounds={out.sync_rounds})")
+
+
+def serve(ds, args):
+    from repro.serve import DecodeService, ServiceConfig, run_open_loop
+
+    with DecodeService(ServiceConfig(
+            batch_size=args.batch, chunk_bits=args.chunk_bits,
+            backend=args.backend, slo_ms=args.slo)) as svc:
+        svc.prewarm(ds.jpeg_bytes[:args.batch])
+        svc.reset_stats()
+        load = run_open_loop(
+            svc, ds.jpeg_bytes, n_requests=args.images,
+            rate_ips=args.rate,
+            deadline_ms=args.slo if args.rate > 0 else 600_000.0)
+        stats = svc.serve_stats()
+    print(f"serve     : {load['completed']}/{load['n_requests']} done "
+          f"{load['ips']:7.1f} img/s  p50 {load['p50_ms']:6.2f} ms  "
+          f"p99 {load['p99_ms']:6.2f} ms  "
+          f"misses {load['deadline_misses']}")
+    print(f"            occupancy {stats['occupancy_mean']:.2f}/"
+          f"{args.batch}  batches {stats['batches']}  admitted buckets "
+          f"{len(stats['buckets'])}/{stats['max_buckets']}")
 
 
 if __name__ == "__main__":

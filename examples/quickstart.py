@@ -33,10 +33,10 @@ def main():
     print(f"plan: {dec.plan.n_chunks} subsequences of "
           f"{dec.plan.chunk_bits} bits across {dec.plan.n_segments} segments")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = dec.decode(emit="rgb")
     out.rgb.block_until_ready()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"decoded in {dt*1e3:.0f} ms "
           f"({ds.compressed_mb / dt:.1f} MB/s compressed, "
           f"sync converged in {out.sync_rounds} rounds)")

@@ -79,10 +79,10 @@ def main():
     decode_ms = 0.0
     for i in range(start, args.steps):
         j = (i * args.batch) % (n_img - args.batch + 1)
-        t0 = time.time()
+        t0 = time.perf_counter()
         patches, stats = pipe.patches_for(ds.jpeg_bytes[j : j + args.batch])
         patches.block_until_ready()
-        decode_ms += (time.time() - t0) * 1e3
+        decode_ms += (time.perf_counter() - t0) * 1e3
         tb = toks.batch_at(i)
         batch = {
             "tokens": jnp.asarray(tb["tokens"]),

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -186,12 +187,55 @@ class DecodeProgram:
     store_fused: bool = False
     pixels_fused: bool = False
 
+    # First-call serialization (thread safety). jax.jit does not promise a
+    # single trace under concurrent first calls from multiple threads, and
+    # the self-counting trace counters above are the compile-once contract
+    # surface — a double trace would both waste a compile and corrupt the
+    # counters the tests (and serve_stats) assert on. ``call_coeffs`` /
+    # ``call_pixels`` funnel the first call per (stage, trace_token)
+    # through a per-program lock; warm calls take the lock-free fast path.
+    # Both fields are identity state, excluded from the dataclass compare.
+    trace_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    traced_keys: set = dataclasses.field(
+        default_factory=set, repr=False, compare=False)
+
     @property
     def compiles(self) -> int:
         return self.coeffs_traces + self.pixels_traces
 
+    def _call_once_locked(self, key, fn, *args):
+        if key in self.traced_keys:
+            return fn(*args)
+        with self.trace_lock:
+            out = fn(*args)
+            # recorded only after the traced call returns: a concurrent
+            # waiter then hits the warmed jit cache, never a second trace
+            self.traced_keys.add(key)
+        return out
+
+    def call_coeffs(self, words, dev, trace_token):
+        """``coeffs_fn`` with the first call per trace_token serialized
+        (the operand shapes are fixed by the PlanShape, so the token is
+        the only varying component of the jit key)."""
+        return self._call_once_locked(("coeffs", trace_token),
+                                      self.coeffs_fn, words, dev, trace_token)
+
+    def call_pixels(self, pixdev, pix_layout, coeffs, trace_token):
+        return self._call_once_locked(("pixels", trace_token),
+                                      self.pixels_fn, pixdev, pix_layout,
+                                      coeffs, trace_token)
+
 
 _PROGRAMS: Dict[Tuple, DecodeProgram] = {}
+# Guards _PROGRAMS lookup/insert (and snapshots of it): two stage threads
+# first-touching the same bucket without it would each build their own
+# DecodeProgram — one wins the dict insert but both get traced, and the
+# loser's trace counters are silently lost (the "double-trace" race the
+# decode service surfaced; regression test in tests/test_serve.py).
+# _build_program only constructs closures (jax.jit is lazy — no trace
+# happens under the lock), so holding it across the build is cheap.
+_PROGRAMS_LOCK = threading.Lock()
 _cpu_donation_warning_filtered = False
 
 
@@ -234,11 +278,12 @@ def decode_program(shape: PlanShape, sync: str = "jacobi",
     check_fuse(fuse, backend)
     _filter_cpu_donation_warning()
     key = (shape, sync, backend, interpret, fuse, tiles)
-    prog = _PROGRAMS.get(key)
-    if prog is None:
-        prog = _build_program(shape, sync, backend, interpret, None, fuse,
-                              tiles)
-        _PROGRAMS[key] = prog
+    with _PROGRAMS_LOCK:
+        prog = _PROGRAMS.get(key)
+        if prog is None:
+            prog = _build_program(shape, sync, backend, interpret, None, fuse,
+                                  tiles)
+            _PROGRAMS[key] = prog
     if idct_impl is None:
         return prog
     custom = DecodeProgram(shape=shape, sync=sync, backend=backend,
@@ -251,11 +296,13 @@ def decode_program(shape: PlanShape, sync: str = "jacobi",
 
 def clear_decode_programs() -> None:
     """Drop every cached compiled decoder (tests / memory pressure)."""
-    _PROGRAMS.clear()
+    with _PROGRAMS_LOCK:
+        _PROGRAMS.clear()
 
 
 def decode_programs() -> List[DecodeProgram]:
-    return list(_PROGRAMS.values())
+    with _PROGRAMS_LOCK:
+        return list(_PROGRAMS.values())
 
 
 def decode_program_stats() -> Dict:
@@ -511,9 +558,11 @@ def _quarantine_shape(plan: BatchPlan, own: PlanShape, sync: str,
     nothing compiled covers the plan.
     """
     best = None
+    with _PROGRAMS_LOCK:
+        keys = list(_PROGRAMS.keys())
     # tiles are not part of the match: they derive from the shape via the
     # memoized autotuner, so a covering shape resolves to its own tiles
-    for (shape, s, b, i, f, _t) in _PROGRAMS.keys():
+    for (shape, s, b, i, f, _t) in keys:
         if (s, b, i, f) != (sync, backend, interpret, fuse):
             continue
         if not _shape_covers(shape, plan):
@@ -744,7 +793,7 @@ class ParallelDecoder:
         # numpy in => jit transfers a fresh device buffer it may donate;
         # the capacity-sized output is sliced to the real unit count
         # host-side (a python int, so no retrace)
-        coeffs, rounds, conv = self.program.coeffs_fn(
+        coeffs, rounds, conv = self.program.call_coeffs(
             self.data.words, self._dev_rest, S.trace_token())
         if coeffs.shape[0] != self.plan.total_units:
             coeffs = _slice_units(coeffs, self.plan.total_units,
@@ -768,7 +817,7 @@ class ParallelDecoder:
                 "pixel stage requires a geometry-uniform batch; decode images "
                 "with mixed geometry via bucketing in repro.data.jpeg_pipeline"
             )
-        planes, rgb = self.program.pixels_fn(
+        planes, rgb = self.program.call_pixels(
             self._pixdev, self._pix_layout, out.coeffs, S.trace_token())
         return dataclasses.replace(
             out, planes=planes, rgb=rgb if emit == "rgb" else None

@@ -28,6 +28,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -117,6 +118,13 @@ class JpegVisionPipeline:
                 f"got {decoder_cache_size}")
         self._decoder_cache_size = decoder_cache_size
         self._decoders: Dict = collections.OrderedDict()
+        # One pipeline may be fed from several stage/worker threads (the
+        # decode service, or a threaded data loader): every running counter
+        # below and the handle LRU mutate under this lock — the bare
+        # ``self._batches += 1`` increments are NOT atomic and lost updates
+        # corrupted the compile-once accounting under concurrency (pinned
+        # by tests/test_serve.py). Device work never runs under the lock.
+        self._lock = threading.Lock()
         # streaming counters for decode_stats()
         self._batches = 0
         self._compiles = 0
@@ -149,21 +157,26 @@ class JpegVisionPipeline:
 
     def _decoder(self, blobs: Sequence[bytes]) -> ParallelDecoder:
         key = self._batch_key(blobs)
-        dec = self._decoders.get(key)
-        if dec is None:
-            dec = ParallelDecoder.from_bytes(
-                list(blobs), chunk_bits=self.chunk_bits, sync=self.sync,
-                use_kernels=self.use_kernels, backend=self.backend,
-                balance=self.balance,
-                lanes=(self.mesh.devices.size
-                       if self.mesh is not None else None),
-                bucket=self.bucket, validate=self.validate, fuse=self.fuse)
-            if self._decoder_cache_size > 0:
+        with self._lock:
+            dec = self._decoders.get(key)
+            if dec is not None:
+                self._decoders.move_to_end(key)
+                return dec
+        # plan build + device upload happen outside the lock; two threads
+        # missing the same key both build (benign — handles are content
+        # addressed and the compiled program is shared), last insert wins
+        dec = ParallelDecoder.from_bytes(
+            list(blobs), chunk_bits=self.chunk_bits, sync=self.sync,
+            use_kernels=self.use_kernels, backend=self.backend,
+            balance=self.balance,
+            lanes=(self.mesh.devices.size
+                   if self.mesh is not None else None),
+            bucket=self.bucket, validate=self.validate, fuse=self.fuse)
+        if self._decoder_cache_size > 0:
+            with self._lock:
                 self._decoders[key] = dec
                 while len(self._decoders) > self._decoder_cache_size:
                     self._decoders.popitem(last=False)
-        else:
-            self._decoders.move_to_end(key)
         return dec
 
     def patches_for(self, blobs: Sequence[bytes]):
@@ -214,17 +227,19 @@ class JpegVisionPipeline:
         return tokens, stats
 
     def _record(self, stats: JpegPipelineStats) -> None:
-        self._batches += 1
-        self._compiles += int(stats.compiled)
-        log = self._cold_ms if stats.compiled else self._warm_ms
-        log.append(stats.decode_ms)
-        del log[:-100]  # bounded history for the medians
-        self._buckets[stats.bucket] = self._buckets.get(stats.bucket, 0) + 1
-        if stats.status is not None:
-            self._images_ok += int((stats.status == STATUS_OK).sum())
-            self._images_recovered += stats.images_recovered
-            self._images_rejected += stats.images_rejected
-        self._last = stats
+        with self._lock:
+            self._batches += 1
+            self._compiles += int(stats.compiled)
+            log = self._cold_ms if stats.compiled else self._warm_ms
+            log.append(stats.decode_ms)
+            del log[:-100]  # bounded history for the medians
+            self._buckets[stats.bucket] = \
+                self._buckets.get(stats.bucket, 0) + 1
+            if stats.status is not None:
+                self._images_ok += int((stats.status == STATUS_OK).sum())
+                self._images_recovered += stats.images_recovered
+                self._images_rejected += stats.images_rejected
+            self._last = stats
 
     def decode_stats(self) -> Dict:
         """Streaming decode counters for dry-run reports.
@@ -244,31 +259,42 @@ class JpegVisionPipeline:
         which keeps the per-host dicts separate).
         """
         med = (lambda xs: float(np.median(xs)) if xs else 0.0)
-        last = self._last
         from ..launch.multihost import process_info  # lazy: launch uses us
         info = process_info()
-        dec = self._last_dec
+        # snapshot every counter under the lock so a concurrent _record
+        # cannot be observed half-applied; the launch accounting retrace
+        # (abstract but not free) runs outside it
+        with self._lock:
+            last = self._last
+            dec = self._last_dec
+            batches, compiles = self._batches, self._compiles
+            cold_ms, warm_ms = list(self._cold_ms), list(self._warm_ms)
+            buckets = dict(self._buckets)
+            images_ok = self._images_ok
+            images_recovered = self._images_recovered
+            images_rejected = self._images_rejected
         if dec is not None:
             key = (id(dec.program), dec.fuse)
             if self._launch_key != key:
-                self._launch = dec.launch_stats()
-                self._launch_key = key
+                launch = dec.launch_stats()
+                with self._lock:
+                    self._launch, self._launch_key = launch, key
         launch = self._launch
         return {
-            "batches": self._batches,
-            "compile_count": self._compiles,
-            "cold_step_ms": med(self._cold_ms),
-            "warm_step_ms": med(self._warm_ms),
-            "buckets": dict(self._buckets),
+            "batches": batches,
+            "compile_count": compiles,
+            "cold_step_ms": med(cold_ms),
+            "warm_step_ms": med(warm_ms),
+            "buckets": buckets,
             "active_bucket": last.bucket if last else "",
             "sync_rounds": last.sync_rounds if last else 0,
             "transfer_saving": last.transfer_saving if last else 0.0,
             # resilience rollups (all zero unless validate=True); per
             # process like everything else here — gather_decode_stats keeps
             # them per-host, never summed
-            "images_ok": self._images_ok,
-            "images_recovered": self._images_recovered,
-            "images_rejected": self._images_rejected,
+            "images_ok": images_ok,
+            "images_recovered": images_recovered,
+            "images_rejected": images_rejected,
             # fusion + kernel-launch accounting of the active program
             # (ParallelDecoder.launch_stats; empty-dict defaults before
             # the first batch): launch-site counts per decode step and

@@ -134,6 +134,94 @@ def jpeg_stream_dryrun(n_batches: int, batch_size: int = 4,
     return pipe.decode_stats()
 
 
+def render_serve_stats(stats: dict, load: dict = None) -> str:
+    """Render ``DecodeService.serve_stats()`` (and optionally a
+    ``run_open_loop`` summary) as the EXPERIMENTS.md §Decode-serve table.
+
+    Surfaced by the ``--decode-serve`` dry-run in ``launch/serve.py``:
+    batch occupancy vs batch size is the continuous-batching health
+    check, deadline misses vs completed the SLO check, and the admitted
+    bucket list the compile-budget check (admission control caps the
+    program cache; see docs/SERVING.md §Serving front-end).
+    """
+    out = []
+    out.append("### Decode serve (continuous batching)\n")
+    lat = stats.get("latency_ms", {})
+    out.append("| submitted | completed | batches | occupancy | deadline "
+               "misses | p50 | p99 | throughput | warm batch |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    out.append(
+        f"| {stats.get('submitted', 0)} | {stats.get('completed', 0)} "
+        f"| {stats.get('batches', 0)} "
+        f"| {stats.get('occupancy_mean', 0.0):.2f}/"
+        f"{stats.get('batch_size', 0)} "
+        f"| {stats.get('deadline_misses', 0)} "
+        f"| {fmt_s(lat.get('p50', 0.0) / 1e3)} "
+        f"| {fmt_s(lat.get('p99', 0.0) / 1e3)} "
+        f"| {stats.get('throughput_ips', 0.0):.1f} img/s "
+        f"| {fmt_s(stats.get('warm_batch_ms', 0.0) / 1e3)} |")
+    rej = stats.get("rejected") or {}
+    if rej:
+        out.append("\nrejections: " + ", ".join(
+            f"{k}: {v}" for k, v in sorted(rej.items())))
+    buckets = stats.get("buckets") or {}
+    if buckets:
+        out.append(
+            f"\nadmitted buckets ({len(buckets)}/"
+            f"{stats.get('max_buckets', 0)}, batches as hits+misses): "
+            + ", ".join(f"`{k}`: {v.get('hits', 0)}+{v.get('misses', 0)}"
+                        for k, v in sorted(buckets.items())))
+    if load:
+        out.append(
+            f"\nopen loop: {load.get('n_requests', 0)} requests at "
+            f"{load.get('rate_ips', 0.0):.1f} img/s -> "
+            f"{load.get('completed', 0)} completed, "
+            f"{load.get('deadline_misses', 0)} missed, "
+            f"p50 {load.get('p50_ms', 0.0):.2f}ms / "
+            f"p99 {load.get('p99_ms', 0.0):.2f}ms, "
+            f"{load.get('ips', 0.0):.1f} img/s achieved")
+    return "\n".join(out)
+
+
+def decode_serve_dryrun(n_requests: int, batch_size: int = 4,
+                        rate_ips: float = 0.0, slo_ms: float = 250.0,
+                        backend=None, width: int = 32, height: int = 32,
+                        chunk_bits: int = 256, seed: int = 0) -> tuple:
+    """Drive a :class:`~repro.serve.DecodeService` with ``n_requests`` of
+    open-loop traffic and return ``(serve_stats, load_summary)``.
+
+    The ``--decode-serve N`` flag of ``launch/serve.py`` runs this before
+    the model driver — the serving analogue of ``--jpeg-stream`` — so a
+    dry run surfaces the continuous-batching counters (occupancy,
+    deadline misses, admitted buckets) next to the model numbers. Pass
+    both results to :func:`render_serve_stats`. ``rate_ips == 0`` drains
+    a saturated backlog (throughput mode); a positive rate is Poisson
+    open-loop traffic against ``slo_ms``.
+    """
+    from ..jpeg.encoder import DatasetSpec, build_dataset
+    from ..serve import DecodeService, ServiceConfig, run_open_loop
+
+    ds = build_dataset(DatasetSpec("decode-serve-dryrun",
+                                   n_images=max(n_requests, batch_size),
+                                   width=width, height=height, quality=80))
+    svc = DecodeService(ServiceConfig(
+        batch_size=batch_size, chunk_bits=chunk_bits, backend=backend,
+        slo_ms=slo_ms))
+    try:
+        svc.prewarm(ds.jpeg_bytes[:batch_size])
+        svc.reset_stats()
+        # drain mode saturates the queue, so queue wait is unbounded by
+        # design — a huge deadline keeps it a throughput measurement
+        load = run_open_loop(svc, ds.jpeg_bytes, n_requests=n_requests,
+                             rate_ips=rate_ips, seed=seed,
+                             deadline_ms=slo_ms if rate_ips > 0
+                             else 600_000.0)
+        stats = svc.serve_stats()
+    finally:
+        svc.close()
+    return stats, load
+
+
 def render(path: str) -> str:
     rows = json.load(open(path))
     out = []

@@ -27,6 +27,16 @@ def main():
                     help="dry-run the JPEG input pipeline over N distinct "
                          "batches first and report the streaming decode "
                          "stats (compile-once buckets, warm-step ms)")
+    ap.add_argument("--decode-serve", type=int, default=0, metavar="N",
+                    help="dry-run the continuous-batching decode service "
+                         "with N open-loop requests first and report its "
+                         "serve stats (occupancy, deadline misses, "
+                         "admitted buckets)")
+    ap.add_argument("--serve-rate", type=float, default=0.0, metavar="IPS",
+                    help="Poisson arrival rate for --decode-serve "
+                         "(images/sec; 0 = saturated backlog drain)")
+    ap.add_argument("--serve-slo", type=float, default=250.0, metavar="MS",
+                    help="per-request deadline for --decode-serve")
     ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
                     help="jax.distributed coordinator for a multi-host "
                          "launch (or REPRO_COORDINATOR); the JPEG stream "
@@ -47,6 +57,14 @@ def main():
                                    ctx=ctx)
         if ctx.is_main:
             print(render_decode_stats(stats), flush=True)
+
+    if args.decode_serve and ctx.is_main:
+        from .report import decode_serve_dryrun, render_serve_stats
+        sstats, load = decode_serve_dryrun(args.decode_serve,
+                                           batch_size=args.batch,
+                                           rate_ips=args.serve_rate,
+                                           slo_ms=args.serve_slo)
+        print(render_serve_stats(sstats, load), flush=True)
 
     cfg = get_smoke_config(args.arch)
     max_len = args.prompt_len + args.gen + 8 + (

@@ -1,0 +1,26 @@
+"""Serving layer.
+
+``decode_service`` is the continuous-batching async JPEG decode
+front-end (docs/SERVING.md, "Serving front-end"); ``step`` holds the
+model-serving prefill/decode step builders and is imported directly by
+``launch/serve.py`` (not re-exported here, so importing the decode
+service never pulls in the model stack).
+"""
+from .decode_service import (BucketAdmissionError, DeadlineExceeded,
+                             DecodeService, QueueFull, RequestRejected,
+                             RequestTooLarge, ServeError, ServeResult,
+                             ServiceClosed, ServiceConfig, run_open_loop)
+
+__all__ = [
+    "DecodeService",
+    "ServiceConfig",
+    "ServeResult",
+    "ServeError",
+    "ServiceClosed",
+    "RequestRejected",
+    "RequestTooLarge",
+    "QueueFull",
+    "BucketAdmissionError",
+    "DeadlineExceeded",
+    "run_open_loop",
+]

@@ -1,0 +1,372 @@
+"""Continuous-batching decode service + the concurrency fixes it exposed.
+
+Three layers:
+
+* compile-cache thread safety — the module-level ``decode_program`` cache
+  and the per-program first-call trace serialization (N threads hammering
+  one bucket must produce exactly one entry and exactly one trace);
+* pipeline stats thread safety — ``JpegVisionPipeline`` counters under
+  concurrent ``patches_for`` stay exact;
+* the service itself — forming, admission, quarantine, drain, and the
+  typed rejection surface (``repro.serve.decode_service``).
+
+Most service tests share one (geometry, batch_size, chunk_bits) bucket so
+the per-process program cache amortizes the compile across the module.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import synth_image
+
+from repro.core import clear_decode_programs, decode_programs
+from repro.core.api import ParallelDecoder, decode_program
+from repro.core.bitstream import BatchValidation, build_batch_plan, \
+    plan_shape, validate_blob
+from repro.data.jpeg_pipeline import JpegVisionPipeline
+from repro.jpeg import codec_ref as cr
+from repro.serve import (BucketAdmissionError, DeadlineExceeded,
+                         DecodeService, QueueFull, RequestRejected,
+                         RequestTooLarge, ServiceClosed, ServiceConfig,
+                         run_open_loop)
+
+BATCH = 4
+CHUNK_BITS = 256
+SEQ_CHUNKS = 8
+W = H = 32
+
+
+def blob(seed: int, w: int = W, h: int = H) -> bytes:
+    return cr.encode_baseline(synth_image(h, w, seed=seed),
+                              quality=80).jpeg_bytes
+
+
+def corpus(n: int, w: int = W, h: int = H):
+    return [blob(s, w, h) for s in range(n)]
+
+
+def service(**overrides) -> DecodeService:
+    cfg = dict(batch_size=BATCH, chunk_bits=CHUNK_BITS,
+               seq_chunks=SEQ_CHUNKS, slo_ms=60_000.0, max_form_ms=30.0)
+    cfg.update(overrides)
+    return DecodeService(ServiceConfig(**cfg))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: module-level decode_program cache under concurrency
+# ---------------------------------------------------------------------------
+
+class TestCompileCacheThreadSafety:
+    def test_concurrent_lookup_single_cache_entry(self):
+        """N threads first-touching one bucket through ``decode_program``
+        must share one entry — pre-lock, each built its own program and
+        the dict-insert loser's trace counters were silently lost."""
+        clear_decode_programs()
+        plan = build_batch_plan(corpus(BATCH), chunk_bits=CHUNK_BITS,
+                                seq_chunks=SEQ_CHUNKS)
+        shape = plan_shape(plan)
+        n = 8
+        barrier = threading.Barrier(n)
+        got = [None] * n
+        errs = []
+
+        def hammer(i):
+            try:
+                barrier.wait(timeout=30)
+                got[i] = decode_program(shape, sync="jacobi", backend="jnp")
+            except Exception as e:  # pragma: no cover - surfaced via errs
+                errs.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errs
+        assert all(p is got[0] for p in got), "threads got distinct programs"
+        assert len(decode_programs()) == 1
+
+    def test_concurrent_first_decode_single_trace(self):
+        """N threads decoding through one bucket concurrently (including
+        the very first, tracing call) must record exactly one coeffs and
+        one pixels trace: jax.jit does not serialize concurrent first
+        calls, the per-program trace lock does."""
+        clear_decode_programs()
+        blobs = corpus(BATCH)
+        n = 6
+        barrier = threading.Barrier(n)
+        errs = []
+        outs = [None] * n
+
+        def decode_one(i):
+            try:
+                dec = ParallelDecoder.from_bytes(
+                    blobs, chunk_bits=CHUNK_BITS, seq_chunks=SEQ_CHUNKS)
+                barrier.wait(timeout=60)
+                outs[i] = np.asarray(dec.decode(emit="rgb").rgb)
+            except Exception as e:
+                errs.append(e)
+
+        threads = [threading.Thread(target=decode_one, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        assert not errs, errs
+        progs = decode_programs()
+        assert len(progs) == 1
+        assert progs[0].coeffs_traces == 1, progs[0].coeffs_traces
+        assert progs[0].pixels_traces == 1, progs[0].pixels_traces
+        for o in outs[1:]:
+            np.testing.assert_array_equal(o, outs[0])
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: JpegVisionPipeline stats under concurrent use
+# ---------------------------------------------------------------------------
+
+class TestPipelineStatsThreadSafety:
+    def test_threaded_counters_exact(self):
+        """Concurrent ``patches_for`` callers must not lose counter
+        increments — bare ``+=`` on the shared stats is not atomic under
+        the GIL once the value read and write straddle a bytecode
+        boundary."""
+        pipe = JpegVisionPipeline(patch=8, embed_dim=32,
+                                  chunk_bits=CHUNK_BITS, validate=True,
+                                  sync_stats=True)
+        n_threads, per_thread = 4, 5
+        # per-thread distinct batches (same bucket) so decoder handles
+        # don't serialize on the LRU entry
+        batches = {t: [corpus(BATCH)[(t + i) % BATCH:]
+                       + corpus(BATCH)[:(t + i) % BATCH]
+                       for i in range(per_thread)]
+                   for t in range(n_threads)}
+        barrier = threading.Barrier(n_threads)
+        errs = []
+
+        def run(t):
+            try:
+                barrier.wait(timeout=30)
+                for b in batches[t]:
+                    pipe.patches_for(b)
+            except Exception as e:
+                errs.append(e)
+
+        threads = [threading.Thread(target=run, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+        assert not errs, errs
+        stats = pipe.decode_stats()
+        assert stats["batches"] == n_threads * per_thread
+        assert stats["images_ok"] == n_threads * per_thread * BATCH
+        assert stats["images_recovered"] == 0
+        assert stats["images_rejected"] == 0
+        assert sum(stats["buckets"].values()) == n_threads * per_thread
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: the decode service
+# ---------------------------------------------------------------------------
+
+class TestServiceBasics:
+    def test_full_batches_decode_and_match_reference(self):
+        blobs = corpus(2 * BATCH)
+        with service() as svc:
+            res = [f.result(timeout=300) for f in svc.submit_many(blobs)]
+        assert all(r.status == 0 for r in res)
+        assert all(r.batch_images == BATCH for r in res)
+        for b, r in zip(blobs, res):
+            ref = cr.decode_baseline(b)
+            got = np.asarray(r.rgb)
+            assert got.shape == ref.shape
+            assert np.abs(got.astype(int) - ref.astype(int)).max() <= 1
+        assert {r.bucket for r in res}  # every result names its bucket
+
+    def test_serve_stats_shape(self):
+        with service() as svc:
+            futs = svc.submit_many(corpus(BATCH))
+            [f.result(timeout=300) for f in futs]
+            stats = svc.serve_stats()
+        assert stats["submitted"] == BATCH
+        assert stats["completed"] == BATCH
+        assert stats["batches"] == 1
+        assert stats["occupancy_mean"] == BATCH
+        assert stats["deadline_misses"] == 0
+        assert stats["latency_ms"]["p99"] >= stats["latency_ms"]["p50"] > 0
+        assert len(stats["admitted_buckets"]) == 1
+        # one mint for the bucket, riding the shared program-cache surface
+        assert sum(v["misses"] for v in stats["buckets"].values()) == 1
+        assert stats["programs"]["programs"] >= 1
+
+    def test_submit_after_close_raises(self):
+        svc = service()
+        svc.close()
+        with pytest.raises(ServiceClosed):
+            svc.submit(blob(0))
+
+
+class TestFormerEdgeCases:
+    def test_sparse_queue_partial_flush_on_deadline(self):
+        """Fewer requests than batch_size must still decode once the
+        former's max_form window expires — padded with inert quarantine
+        slots, not stalled waiting for a full batch."""
+        with service(max_form_ms=25.0) as svc:
+            t0 = time.perf_counter()
+            futs = svc.submit_many(corpus(BATCH - 2))
+            res = [f.result(timeout=300) for f in futs]
+            waited = time.perf_counter() - t0
+        assert all(r.status == 0 for r in res)
+        assert all(r.batch_images == BATCH - 2 for r in res)
+        # flushed by the timer (not instantaneous, not the 60s deadline)
+        assert waited < 60.0
+
+    def test_partial_flush_pads_do_not_change_image_count(self):
+        """The padded partial batch rides a batch_size-image bucket: the
+        former fills with quarantine lanes rather than re-bucketing to a
+        smaller n_images (which would mint per-occupancy compile keys)."""
+        with service() as svc:
+            futs = svc.submit_many(corpus(3))
+            res = [f.result(timeout=300) for f in futs]
+            admitted = svc.serve_stats()["admitted_buckets"]
+        assert len(admitted) == 1
+        assert f"b{BATCH}:" in admitted[0]
+        assert all(r.bucket == admitted[0] for r in res)
+
+    def test_oversized_request_typed_rejection_no_cache_entry(self):
+        """A blob over the top words-ladder rung fails typed at submit —
+        before any plan exists — and must not grow the compile cache or
+        the admitted-bucket set."""
+        clear_decode_programs()
+        with service(max_words=64) as svc:
+            fut = svc.submit(blob(0))
+            with pytest.raises(RequestTooLarge) as ei:
+                fut.result(timeout=30)
+            stats = svc.serve_stats()
+        assert ei.value.reason == "too_large"
+        assert stats["rejected"] == {"too_large": 1}
+        assert stats["admitted_buckets"] == []
+        assert stats["batches"] == 0
+        assert len(decode_programs()) == 0
+
+    def test_shutdown_drains_in_flight_work(self):
+        """close(drain=True) issued immediately after a submit burst must
+        resolve every future (served, not abandoned)."""
+        blobs = corpus(3 * BATCH)
+        svc = service()
+        futs = svc.submit_many(blobs)
+        svc.close(drain=True)
+        res = [f.result(timeout=60) for f in futs]  # already resolved
+        assert all(r.status == 0 for r in res)
+        assert svc.serve_stats()["completed"] == len(blobs)
+
+    def test_shutdown_without_drain_fails_pending_typed(self):
+        svc = service(max_form_ms=10_000.0)  # hold the batch open
+        futs = svc.submit_many(corpus(2))
+        svc.close(drain=False)
+        for f in futs:
+            with pytest.raises((ServiceClosed, RequestRejected)):
+                f.result(timeout=60)
+
+    def test_queue_limit_sheds_typed(self):
+        svc = service(queue_limit=2, max_form_ms=10_000.0)
+        try:
+            futs = svc.submit_many(corpus(4))
+            rejected = []
+            for f in futs[2:]:
+                with pytest.raises(QueueFull):
+                    f.result(timeout=30)
+                rejected.append(f)
+            assert len(rejected) == 2
+        finally:
+            svc.close(drain=False)
+
+
+class TestAdmissionControl:
+    def test_new_bucket_beyond_budget_rejected(self):
+        """max_buckets=1 + admission="reject": the second geometry's batch
+        would mint a second compile bucket and must fail typed instead."""
+        with service(max_buckets=1) as svc:
+            ok = [f.result(timeout=300)
+                  for f in svc.submit_many(corpus(BATCH))]
+            assert all(r.status == 0 for r in ok)
+            futs = svc.submit_many(corpus(BATCH, w=16, h=16))
+            for f in futs:
+                with pytest.raises(BucketAdmissionError) as ei:
+                    f.result(timeout=60)
+                assert ei.value.reason == "admission"
+            stats = svc.serve_stats()
+        assert len(stats["admitted_buckets"]) == 1
+        assert stats["rejected"]["admission"] == BATCH
+
+    def test_wait_admission_bounded_by_deadline(self):
+        """admission="wait": an unadmittable batch retries until each
+        request's deadline converts the wait into DeadlineExceeded."""
+        with service(max_buckets=1, admission="wait",
+                     wait_retry_ms=5.0, max_form_ms=5.0) as svc:
+            [f.result(timeout=300) for f in svc.submit_many(corpus(BATCH))]
+            futs = svc.submit_many(corpus(BATCH, w=16, h=16),
+                                   deadline_ms=150.0)
+            for f in futs:
+                with pytest.raises(DeadlineExceeded) as ei:
+                    f.result(timeout=60)
+                assert ei.value.reason == "deadline"
+            assert len(svc.serve_stats()["admitted_buckets"]) == 1
+
+    def test_partial_batch_rides_admitted_covering_bucket(self):
+        """After a full batch admits its bucket, a padded partial batch
+        (fewer words) must ride it as a hit, not mint a lower rung."""
+        with service() as svc:
+            [f.result(timeout=300) for f in svc.submit_many(corpus(BATCH))]
+            [f.result(timeout=300) for f in svc.submit_many(corpus(2))]
+            stats = svc.serve_stats()
+        assert len(stats["admitted_buckets"]) == 1
+        bucket = stats["admitted_buckets"][0]
+        assert stats["buckets"][bucket] == {"hits": 1, "misses": 1}
+
+
+class TestQuarantineFlow:
+    def test_damaged_requests_never_stall_the_queue(self):
+        """validate=True: corrupt requests flow through PR 6 validation as
+        quarantine lanes — they resolve with STATUS_REJECTED results while
+        clean requests in the same stream decode normally."""
+        good = corpus(BATCH)
+        bad = good[0][:40]          # truncated before the scan
+        with service(validate=True) as svc:
+            futs = svc.submit_many(good + [bad])
+            res = [f.result(timeout=300) for f in futs]
+        clean, damaged = res[:BATCH], res[BATCH]
+        assert all(r.status == 0 for r in clean)
+        assert damaged.status == 2          # STATUS_REJECTED, not an error
+        assert damaged.error                # carries the diagnostic
+        assert damaged.rgb is None or np.asarray(damaged.rgb).size >= 0
+
+    def test_strict_mode_rejects_damage_before_batching(self):
+        with service(validate=False) as svc:
+            fut = svc.submit(b"\xff\xd8 not a jpeg")
+            with pytest.raises(RequestRejected) as ei:
+                fut.result(timeout=30)
+            assert ei.value.reason == "damaged"
+            assert svc.serve_stats()["batches"] == 0
+
+
+class TestOpenLoop:
+    def test_poisson_open_loop_summary(self):
+        blobs = corpus(BATCH)
+        with service() as svc:
+            svc.prewarm(blobs)
+            svc.reset_stats()
+            load = run_open_loop(svc, blobs, n_requests=3 * BATCH,
+                                 rate_ips=300.0, seed=0,
+                                 deadline_ms=30_000.0)
+        assert load["completed"] == 3 * BATCH
+        assert load["rejected"] == {}
+        assert load["p99_ms"] >= load["p50_ms"] > 0
+        assert load["ips"] > 0
+        assert load["deadline_misses"] == 0
